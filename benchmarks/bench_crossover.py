@@ -1,0 +1,50 @@
+"""Paper §4.3/§5 crossover claim: chained 3×3 erosion beats the
+O(1)-per-pixel streaming method (pixel pump; vHGW is its vectorized
+equivalent here) for window sizes up to 183×183 (char) / 27×27 (double).
+
+We sweep the half-size s and report the cost ratio chained/vHGW; the
+measured crossover point on this substrate is the `derived` field of the
+summary row.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import DTYPES, timeit
+from repro.baselines import vhgw
+from repro.data.images import blobs
+from repro.kernels import ops
+
+
+def run(quick: bool = True):
+    size = 512 if quick else 1024
+    sweep = [1, 4, 8, 16, 32, 64] if quick else [1, 4, 8, 16, 32, 64, 91]
+    rows = []
+    for dname in (["char", "double"] if not quick else ["char"]):
+        dt = DTYPES[dname]
+        f = jnp.asarray(blobs(size, size, dt))
+        crossover = None
+        for s in sweep:
+            t_chain = timeit(
+                lambda x: ops.morph_chain(x, s, "erode", "xla"), f)
+            t_vhgw = timeit(lambda x: vhgw.erode(x, s), f)
+            ratio = t_chain / t_vhgw
+            if crossover is None and ratio > 1.0:
+                crossover = s
+            rows.append({
+                "name": f"crossover/{dname}/s{s}",
+                "us_per_call": t_chain * 1e6,
+                "derived": f"vhgw={t_vhgw*1e6:.0f}us ratio={ratio:.2f}",
+            })
+        rows.append({
+            "name": f"crossover/{dname}/summary",
+            "us_per_call": 0.0,
+            "derived": f"chained_faster_until_s={crossover or '>'+str(sweep[-1])}"
+                       f" (window {(crossover or sweep[-1])*2+1}px)",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

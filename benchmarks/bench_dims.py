@@ -1,0 +1,41 @@
+"""Paper Fig. 9 analogue: performance dependency on image dimensions.
+
+Square baseline vs width-varied (fixed H=128) vs height-varied (fixed
+W=128) with a fixed 512-long ε₁ chain — the paper's probe of buffer-size
+(width) vs synchronization (height) sensitivity.  In our TPU mapping
+width sets the VMEM band size and height the number of grid bands.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import DTYPES, timeit
+from repro.data.images import blobs
+from repro.kernels import ops
+
+
+def run(quick: bool = True):
+    n = 128 if quick else 512
+    sizes = [128, 512, 2048] if quick else [128, 512, 2048, 8192]
+    rows = []
+    dt = DTYPES["char"]
+    for label, mk in [
+        ("square", lambda s: (s, s)),
+        ("width", lambda s: (128, s)),
+        ("height", lambda s: (s, 128)),
+    ]:
+        for s in sizes:
+            h, w = mk(s)
+            f = jnp.asarray(blobs(h, w, dt))
+            t = timeit(lambda x: ops.morph_chain(x, n, "erode", "xla"), f)
+            rows.append({
+                "name": f"dims/{label}/{h}x{w}/n{n}",
+                "us_per_call": t * 1e6,
+                "derived": f"{h*w*n/t/1e6:.0f}MPx/s",
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

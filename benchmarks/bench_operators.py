@@ -1,0 +1,84 @@
+"""Paper Table 5 analogue: end-to-end geodesic operators on synthetic
+images with the paper's morphological statistics (blobs / basins /
+border objects), char dtype.
+
+Columns: ours (fused chains, XLA), hierarchical-queue reconstruction
+(the SMIL single-threaded baseline), naive per-filter dispatch; plus the
+reconstruction chain length (the paper reports average chain lengths).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit, timeit_host
+from repro.baselines import queue_reconstruction as qr
+from repro.core import morphology as M
+from repro.core import operators as OPS
+from repro.data.images import basins, blobs, border_objects
+from repro.kernels import ops as K
+
+
+def run(quick: bool = True):
+    size = 256 if quick else 1024
+    male = blobs(size, size, np.uint8)
+    airport = basins(size, size, np.uint8)
+    airplane = border_objects(size, size, np.uint8)
+    f = jnp.asarray(male)
+    rows = []
+
+    def bench(name, ours_fn, queue_fn=None, chain_len=None):
+        t = timeit(ours_fn, repeats=2)
+        derived = []
+        if chain_len is not None:
+            derived.append(f"chain={chain_len}")
+        if queue_fn is not None:
+            tq = timeit_host(queue_fn)
+            derived.append(f"queue_recon={tq*1e6:.0f}us "
+                           f"ratio={tq/t:.2f}x")
+        rows.append({"name": f"operators/{name}/{size}px",
+                     "us_per_call": t * 1e6,
+                     "derived": " ".join(derived)})
+
+    h = 40
+    marker = np.asarray(OPS.sat_sub(f, h))
+    _, iters = jax.jit(
+        lambda a, b: M.dilate_reconstruct_with_iters(a, b))(
+            jnp.asarray(marker), f)
+    bench("HMAX", lambda: jax.jit(lambda x: OPS.hmax(x, h))(f),
+          lambda: qr.dilate_reconstruct(marker, male),
+          chain_len=int(iters))
+    bench("DOME", lambda: jax.jit(lambda x: OPS.dome(x, h))(f))
+
+    fa = jnp.asarray(airport)
+    m_h = np.asarray(OPS.hfill_marker(fa))
+    bench("HFILL", lambda: jax.jit(OPS.hfill)(fa),
+          lambda: qr.erode_reconstruct(m_h, airport))
+
+    fp = jnp.asarray(airplane)
+    m_r = np.asarray(OPS.raobj_marker(fp))
+    bench("RAOBJ", lambda: jax.jit(OPS.raobj)(fp),
+          lambda: qr.dilate_reconstruct(m_r, airplane))
+
+    s_open = 8 if quick else 75
+    bench(f"OPENREC_s{s_open}",
+          lambda: jax.jit(
+              lambda x: OPS.opening_by_reconstruction(x, s_open))(f))
+
+    bench("QDT", lambda: K.qdt_planes(f, backend="xla"))
+
+    smax = 11
+    bench(f"PS_0_{smax}",
+          lambda: jax.jit(lambda x: OPS.pattern_spectrum(x, smax))(f),
+          chain_len=sum(4 * k for k in range(1, smax + 1)))
+
+    s_asf = 5 if quick else 11
+    bench(f"ASF_{s_asf}", lambda: jax.jit(lambda x: OPS.asf(x, s_asf))(f),
+          chain_len=OPS.asf_chain_length(s_asf))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,44 @@
+"""Roofline terms per (arch × shape) from the dry-run artifacts
+(results/dryrun).  Emits one row per cell: the bounding step time and
+which term dominates.  Run the dry-run first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import enrich, load
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def run(quick: bool = True, directory: str = DEFAULT_DIR):
+    rows = []
+    if not os.path.isdir(directory):
+        return [{"name": "roofline/missing", "us_per_call": 0.0,
+                 "derived": f"run dryrun --all --out {directory} first"}]
+    for r in load(directory):
+        if not r.get("ok"):
+            rows.append({"name": f"roofline/{r['arch']}/{r['shape']}/"
+                                 f"{r['mesh']}",
+                         "us_per_call": 0.0,
+                         "derived": f"FAILED {r.get('error', '')[:50]}"})
+            continue
+        r = enrich(r)
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            "us_per_call": r["step_s_bound"] * 1e6,
+            "derived": (f"dom={r['dominant']} "
+                        f"c={r.get('compute_s_hlo', r['compute_s']):.3f}s "
+                        f"m={r['memory_s']:.3f}s k={r['collective_s']:.3f}s "
+                        f"frac={r.get('roofline_frac', 0):.1%} "
+                        f"{r['bytes_per_device']/1e9:.1f}GB/dev"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

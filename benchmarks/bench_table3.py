@@ -1,0 +1,46 @@
+"""Paper Table 3 analogue: per-method working memory and per-pixel
+comparison counts for the evaluated methods, instantiated with our
+TPU-adapted parameters (fusion plan from core.chain instead of the
+paper's T threads).
+
+These are analytic (as in the paper's Table 3), not timed; the
+``us_per_call`` column is 0 by construction and the payload is in
+``derived``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.chain import plan_chain
+
+
+def run(quick: bool = True):
+    x = 1024                       # image width, paper's default
+    rows = []
+    for dname, dt in (("char", np.uint8), ("double", np.float64)):
+        plan = plan_chain(1024, x, dt, 512)
+        th, k = plan.band_h, plan.fuse_k
+        b = np.dtype(dt).itemsize
+        entries = {
+            # proposed (ours): banded VMEM working set per grid step
+            "proposed_fused": (
+                f"cmp_per_px=4 working_set={(3*(th+2*k)*plan.width_pad*b)//1024}KiB"
+                f" (band {th}+2x{k} halo, VMEM) bandwidth_amp="
+                f"{plan.bandwidth_amplification:.1f}x redundancy="
+                f"{plan.redundant_compute_fraction:.1%}"
+            ),
+            # paper's proposed: 2X per filter x T filters
+            "paper_cpu_pipeline": f"cmp_per_px=4 mem=2X*T={2*x}B*T",
+            "pixel_pump": f"cmp_per_px=O(1) mem=(3X+3)*T={(3*x+3)}B*T",
+            "smil_like_naive": f"cmp_per_px=4 mem=XY={x*x*b//1024}KiB full image per filter",
+            "vhgw": f"cmp_per_px=3 mem=2 prefix/suffix rows={2*x*b}B",
+        }
+        for name, derived in entries.items():
+            rows.append({"name": f"table3/{dname}/{name}",
+                         "us_per_call": 0.0, "derived": derived})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,38 @@
+"""Timing helpers + the standard image/dtype matrix of the paper."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+DTYPES = {"char": np.uint8, "short": np.uint16, "float": np.float32,
+          "double": np.float64}
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Best-of wall time in seconds; blocks on jax outputs."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def timeit_host(fn, *args, repeats: int = 1) -> float:
+    """For numpy/python baselines."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(rows: list[dict]):
+    """Print the runner's CSV contract: name,us_per_call,derived."""
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r.get('derived', '')}")

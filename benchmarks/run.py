@@ -1,0 +1,47 @@
+"""Benchmark runner — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only chain,dims]
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+Modules:
+  chain      paper Fig. 7/8 + Table 4 (chain length × dtype, speedups,
+             throughput)
+  dims       paper Fig. 9 (width/height dependency)
+  operators  paper Table 5 (geodesic operators vs queue baselines)
+  crossover  paper §4.3/§5 (chained 3×3 vs O(1)/px window crossover)
+  roofline   §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import (bench_chain, bench_crossover, bench_dims,
+                        bench_operators, bench_roofline, bench_table3)
+from benchmarks.common import emit
+
+MODULES = {
+    "chain": bench_chain,
+    "dims": bench_dims,
+    "operators": bench_operators,
+    "crossover": bench_crossover,
+    "table3": bench_table3,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (1024², long chains)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+
+    names = args.only.split(",") if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    for name in names:
+        emit(MODULES[name].run(quick=not args.full))
+
+
+if __name__ == "__main__":
+    main()

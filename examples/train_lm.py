@@ -1,0 +1,38 @@
+"""Train a reduced-config LM for a few hundred steps with checkpointing
+and (optional) failure injection + recovery.
+
+    PYTHONPATH=src python examples/train_lm.py --arch gemma-2b --steps 200
+    PYTHONPATH=src python examples/train_lm.py --fail-at 90     # dies
+    PYTHONPATH=src python examples/train_lm.py --restore        # resumes
+"""
+import argparse
+
+from repro.configs.registry import ARCH_IDS, get_reduced
+from repro.optim import adamw
+from repro.train.loop import FailureInjector, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma-2b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    tcfg = TrainerConfig(steps=args.steps, seq_len=64, global_batch=8,
+                         checkpoint_every=50,
+                         checkpoint_dir=args.checkpoint_dir, q_chunk=64,
+                         log_every=20)
+    trainer = Trainer(cfg, tcfg,
+                      adamw.AdamWConfig(lr=3e-3, warmup_steps=20,
+                                        total_steps=args.steps))
+    injector = FailureInjector(args.fail_at) if args.fail_at else None
+    _, hist = trainer.run(injector=injector, restore=args.restore)
+    print(f"loss {hist[0]:.3f} -> {hist[-1]:.3f} over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

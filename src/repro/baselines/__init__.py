@@ -1,0 +1,3 @@
+"""The paper's comparison methods (§4.3): naive per-filter iteration
+(SMIL-like), the pixel-pump queue algorithm, van Herk/Gil-Werman, and a
+hierarchical-queue reconstruction oracle."""

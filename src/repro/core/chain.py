@@ -1,0 +1,94 @@
+"""Fusion planner: the paper's pipeline schedule re-derived for TPU.
+
+The paper keeps T elementary filters in flight on T threads, row-window
+synchronized, so inter-filter traffic stays in cache.  On TPU the
+equivalent is *temporal fusion*: one Pallas kernel applies K elementary
+filters to a VMEM-resident row band before the band is written back to
+HBM.  This module picks the fusion depth K and band height TH from the
+dtype, image width and VMEM budget — the analogue of the paper's
+run-time topology examination (§3.6).
+
+Bandwidth model (per K-chunk, per band of TH rows, width W, dtype b):
+    HBM traffic   = (TH + 2K)·W·b read + TH·W·b write      (once)
+    vs. unfused   = K · 2·TH·W·b                            (K round trips)
+    amplification ≈ 2K·TH / (2TH + 2K)  → K for TH >> K
+Redundant compute fraction = 2K / (TH + 2K).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+#: VMEM budget we allow a kernel working set to claim (bytes).  TPU v5e has
+#: 16 MiB/core more or less; leave half for double buffering + compiler slop.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+#: TPU lane count — last-dim tiles should be multiples of this.
+LANES = 128
+#: Sublane multiples per dtype (f32: 8, bf16: 16, int8: 32).
+SUBLANES = {4: 8, 2: 16, 1: 32, 8: 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """A schedule for a chain of S elementary filters."""
+
+    band_h: int          # TH: rows of useful output per grid step
+    fuse_k: int          # K: elementary filters fused per kernel launch
+    width_pad: int       # W rounded up to a lane multiple
+    height_pad: int      # H rounded up to a band multiple
+    n_bands: int
+    n_chunks: int        # ceil(S / K) kernel launches for a fixed chain
+
+    @property
+    def redundant_compute_fraction(self) -> float:
+        return 2 * self.fuse_k / (self.band_h + 2 * self.fuse_k)
+
+    @property
+    def bandwidth_amplification(self) -> float:
+        th, k = self.band_h, self.fuse_k
+        return (2 * k * th) / (2 * th + 2 * k)
+
+
+def plan_chain(
+    height: int,
+    width: int,
+    dtype,
+    chain_len: int | None = None,
+    *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    n_images_resident: int = 1,
+    fuse_k: int | None = None,
+    band_h: int | None = None,
+) -> ChainPlan:
+    """Choose (TH, K) so the working set fits VMEM.
+
+    ``n_images_resident`` counts extra same-shaped operands the kernel
+    holds (e.g. the geodesic mask, QDT's r/d planes).
+    """
+    b = jnp.dtype(dtype).itemsize
+    w_pad = max(LANES, math.ceil(width / LANES) * LANES)
+    sub = SUBLANES.get(b, 8)
+
+    if fuse_k is None:
+        fuse_k = 16 if b >= 4 else 32
+    if chain_len is not None:
+        fuse_k = min(fuse_k, max(1, chain_len))
+    # round K to a sublane multiple so halo blocks tile cleanly
+    fuse_k = max(sub, math.ceil(fuse_k / sub) * sub)
+
+    if band_h is None:
+        # working set ≈ (1 + n_resident)·(TH + 2K)·W·b  + TH·W·b scratch
+        per_row = (2 + n_images_resident) * w_pad * b
+        band_h = max(fuse_k, (vmem_budget - 2 * fuse_k * per_row) // per_row)
+        band_h = max(fuse_k, (band_h // fuse_k) * fuse_k)  # TH % K == 0
+        band_h = min(band_h, 512)
+    if band_h % fuse_k:
+        raise ValueError(f"band_h={band_h} must be a multiple of fuse_k={fuse_k}")
+
+    h_pad = math.ceil(height / band_h) * band_h
+    n_bands = h_pad // band_h
+    n_chunks = math.ceil((chain_len or fuse_k) / fuse_k)
+    return ChainPlan(band_h, fuse_k, w_pad, h_pad, n_bands, n_chunks)

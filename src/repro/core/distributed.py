@@ -1,0 +1,203 @@
+"""Distributed geodesic morphology: the paper's pipeline, scaled out.
+
+The image is sharded in contiguous row/column blocks over mesh axes.
+Every K fused elementary steps, each device exchanges a K-row (K-col)
+halo with its mesh neighbours via ``ppermute`` — a 1-hop ICI transfer,
+the device-level analogue of the paper's cache-topology-aware thread
+pinning (adjacent filters of the chain share the fastest link).
+
+Amortization: K steps need K halo rows; exchanging them in ONE message
+per chunk instead of one row per step keeps the byte volume identical
+but divides the message count (and therefore the latency term of the
+collective roofline) by K, and unlocks the fused local kernel (the HBM
+bandwidth win).  Redundant compute on the halo is the price — the same
+trade the single-device kernel makes (DESIGN.md §2).
+
+Corner halos are handled by exchanging rows first, then exchanging the
+*row-extended* strips along columns, so corner data arrives via the
+column neighbour (two-phase halo exchange).
+
+Convergence of distributed reconstruction is a ``psum`` of the per-device
+changed flags — the collective version of the paper's ``converged`` flag
+(Alg. 4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # jax >= 0.4.35 exposes shard_map at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+from repro.core import morphology as M
+from repro.core.chain import plan_chain
+from repro.kernels.common import ident_for
+
+
+# ---------------------------------------------------------------------------
+# halo exchange
+# ---------------------------------------------------------------------------
+
+
+def _exchange_axis(local, k: int, axis_name, fill, axis: int):
+    """Attach a k-deep halo along ``axis`` from mesh neighbours on
+    ``axis_name`` (global edges are filled with the absorbing value)."""
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        pad = [(0, 0)] * local.ndim
+        pad[axis] = (k, k)
+        return jnp.pad(local, pad, constant_values=fill)
+    idx = jax.lax.axis_index(axis_name)
+
+    sl_lo = [slice(None)] * local.ndim
+    sl_lo[axis] = slice(0, k)
+    sl_hi = [slice(None)] * local.ndim
+    sl_hi[axis] = slice(local.shape[axis] - k, local.shape[axis])
+
+    fwd = [(i, i + 1) for i in range(n - 1)]  # shard i's tail -> shard i+1
+    bwd = [(i + 1, i) for i in range(n - 1)]  # shard i+1's head -> shard i
+    from_prev = jax.lax.ppermute(local[tuple(sl_hi)], axis_name, fwd)
+    from_next = jax.lax.ppermute(local[tuple(sl_lo)], axis_name, bwd)
+    from_prev = jnp.where(idx == 0, fill, from_prev)
+    from_next = jnp.where(idx == n - 1, fill, from_next)
+    return jnp.concatenate([from_prev, local, from_next], axis=axis)
+
+
+def exchange_halo(local, k: int, row_axes, col_axes, fill):
+    """Two-phase 2-D halo exchange (rows, then row-extended columns)."""
+    out = _exchange_axis(local, k, row_axes, fill, axis=0)
+    if col_axes:
+        out = _exchange_axis(out, k, col_axes, fill, axis=1)
+    return out
+
+
+def _crop(ext, k: int, has_cols: bool):
+    if has_cols:
+        return ext[k:-k, k:-k]
+    return ext[k:-k, :]
+
+
+# ---------------------------------------------------------------------------
+# distributed fixed-length chains
+# ---------------------------------------------------------------------------
+
+
+def distributed_chain(
+    mesh: Mesh,
+    row_axes: str | Sequence[str],
+    col_axes: str | Sequence[str] | None = None,
+    *,
+    n: int,
+    op: str = "erode",
+    backend: str = "xla",
+    fuse_k: int | None = None,
+):
+    """Build a jitted sharded n-step elementary chain over ``mesh``.
+
+    Returns a function image -> image; the image is sharded
+    P(row_axes, col_axes) on entry and exit.
+    """
+    spec = P(row_axes, col_axes)
+    row_axes_t = row_axes if isinstance(row_axes, tuple) else (row_axes,)
+    col_axes_t = (
+        () if col_axes is None
+        else col_axes if isinstance(col_axes, tuple) else (col_axes,)
+    )
+
+    def local_fn(f_loc):
+        from repro.kernels import ops
+
+        k = fuse_k or plan_chain(
+            f_loc.shape[0], f_loc.shape[1], f_loc.dtype, n
+        ).fuse_k
+        fill = ident_for(op, f_loc.dtype)
+        full, rem = divmod(n, k)
+
+        def chunk(x, _):
+            ext = exchange_halo(x, k, row_axes_t, col_axes_t, fill)
+            ext = ops.morph_chain(ext, k, op, backend)
+            return _crop(ext, k, bool(col_axes_t)), None
+
+        if full:
+            f_loc, _ = jax.lax.scan(chunk, f_loc, None, length=full)
+        if rem:
+            ext = exchange_halo(f_loc, rem, row_axes_t, col_axes_t, fill)
+            body = M.erode3 if op == "erode" else M.dilate3
+            ext = jax.lax.fori_loop(0, rem, lambda _, y: body(y), ext)
+            f_loc = _crop(ext, rem, bool(col_axes_t))
+        return f_loc
+
+    sharded = shard_map(local_fn, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    return jax.jit(sharded)
+
+
+# ---------------------------------------------------------------------------
+# distributed reconstruction (geodesic, to convergence)
+# ---------------------------------------------------------------------------
+
+
+def distributed_reconstruct(
+    mesh: Mesh,
+    row_axes: str | Sequence[str],
+    col_axes: str | Sequence[str] | None = None,
+    *,
+    op: str = "erode",
+    backend: str = "xla",
+    fuse_k: int | None = None,
+    max_chunks: int | None = None,
+):
+    """Build a jitted sharded ε_rec/δ_rec over ``mesh``.
+
+    Returns (marker, mask) -> reconstructed, both sharded P(rows, cols).
+    """
+    spec = P(row_axes, col_axes)
+    row_axes_t = row_axes if isinstance(row_axes, tuple) else (row_axes,)
+    col_axes_t = (
+        () if col_axes is None
+        else col_axes if isinstance(col_axes, tuple) else (col_axes,)
+    )
+    all_axes = row_axes_t + col_axes_t
+
+    def local_fn(f_loc, m_loc):
+        from repro.kernels import ops
+
+        k = fuse_k or plan_chain(
+            f_loc.shape[0], f_loc.shape[1], f_loc.dtype, None, n_images_resident=2
+        ).fuse_k
+        fill = ident_for(op, f_loc.dtype)
+        # the mask halo is constant: exchange it once, reuse every chunk
+        m_ext = exchange_halo(m_loc, k, row_axes_t, col_axes_t, fill)
+        limit = max_chunks
+        if limit is None:
+            h = f_loc.shape[0] * jax.lax.axis_size(row_axes_t[0])
+            w = f_loc.shape[1]
+            limit = (h + w) // k + 2
+
+        def cond(state):
+            _, changed, it = state
+            return jnp.logical_and(changed, it < limit)
+
+        def body(state):
+            x, _, it = state
+            ext = exchange_halo(x, k, row_axes_t, col_axes_t, fill)
+            ext = ops.geodesic_chain(ext, m_ext, k, op, backend)
+            nxt = _crop(ext, k, bool(col_axes_t))
+            local_changed = jnp.any(nxt != x).astype(jnp.int32)
+            changed = jax.lax.psum(local_changed, all_axes) > 0
+            return nxt, changed, it + 1
+
+        out, _, _ = jax.lax.while_loop(
+            cond, body, (f_loc, jnp.asarray(True), jnp.asarray(0, jnp.int32))
+        )
+        return out
+
+    sharded = shard_map(
+        local_fn, mesh=mesh, in_specs=(spec, spec), out_specs=spec
+    )
+    return jax.jit(sharded)

@@ -1,0 +1,48 @@
+"""Shared in-kernel helpers for the fused morphology Pallas kernels.
+
+Everything here executes inside a Pallas kernel body on VMEM-resident
+values.  The 1-D passes mirror the paper's decomposed SIMD kernels
+(Fig. 2): three displaced views min/max-ed together — on TPU the
+"displaced registers" are lane/sublane shifts of a vreg tile.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ident_for(op: str, dtype):
+    """Lattice identity: +max for erosion (min-op), -max for dilation."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        hi, lo = jnp.array(jnp.inf, dtype), jnp.array(-jnp.inf, dtype)
+    else:
+        info = jnp.iinfo(dtype)
+        hi, lo = jnp.array(info.max, dtype), jnp.array(info.min, dtype)
+    return hi if op == "erode" else lo
+
+
+def shift_minmax_1d(x: jnp.ndarray, axis: int, op: str) -> jnp.ndarray:
+    """min/max(x, x<<1, x>>1) along ``axis`` with identity fill.
+
+    This is the paper's Algorithm-1 inner step: registers A/B/C are the
+    three displaced views; on TPU the displacement is a concat-shift on
+    the sublane (axis 0) or lane (axis 1) dimension of the VMEM tile.
+    """
+    fill_shape = list(x.shape)
+    fill_shape[axis] = 1
+    fill = jnp.full(fill_shape, ident_for(op, x.dtype), x.dtype)
+
+    idx_fwd = [slice(None)] * x.ndim
+    idx_fwd[axis] = slice(1, None)
+    idx_bwd = [slice(None)] * x.ndim
+    idx_bwd[axis] = slice(0, -1)
+    left = jnp.concatenate([x[tuple(idx_fwd)], fill], axis=axis)
+    right = jnp.concatenate([fill, x[tuple(idx_bwd)]], axis=axis)
+
+    f = jnp.minimum if op == "erode" else jnp.maximum
+    return f(x, f(left, right))
+
+
+def elementary_3x3(x: jnp.ndarray, op: str) -> jnp.ndarray:
+    """ε₁ / δ₁ on a VMEM tile: horizontal then vertical decomposed pass."""
+    return shift_minmax_1d(shift_minmax_1d(x, 1, op), 0, op)

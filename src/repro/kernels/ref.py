@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The reference implementations live in ``repro.core.morphology`` /
+``repro.core.operators`` (they ARE the paper's definitions, Eq. 1-20);
+this module re-exports them under kernel-aligned names so each kernel
+test reads ``kernel_out ≈ ref.<name>(...)``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.morphology import (  # noqa: F401
+    dilate,
+    dilate3,
+    erode,
+    erode3,
+    geodesic_dilate,
+    geodesic_erode,
+    dilate_reconstruct,
+    erode_reconstruct,
+)
+from repro.core.operators import qdt_raw  # noqa: F401
+
+
+def chain(f: jnp.ndarray, n: int, op: str) -> jnp.ndarray:
+    """n elementary 3×3 filters — oracle for erode_chain.chain_step."""
+    return erode(f, n) if op == "erode" else dilate(f, n)
+
+
+def geodesic_chain(f: jnp.ndarray, m: jnp.ndarray, n: int, op: str) -> jnp.ndarray:
+    """n elementary geodesic filters — oracle for geodesic_chain_step."""
+    if op == "erode":
+        return geodesic_erode(f, m, n)
+    return geodesic_dilate(f, m, n)
+
+
+def qdt_chunk(f: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray, base: int, n: int):
+    """n QDT erosion steps with residual/distance update — oracle for
+    qdt_chain_step."""
+    acc = r.dtype
+    cur = f
+    for k in range(n):
+        nxt = erode3(cur)
+        res = cur.astype(acc) - nxt.astype(acc)
+        upd = res > r
+        r = jnp.where(upd, res, r)
+        d = jnp.where(upd, base + k + 1, d)
+        cur = nxt
+    return cur, r, d

@@ -1,0 +1,210 @@
+"""Post-SPMD HLO text analysis for the roofline.
+
+``compiled.as_text()`` is the per-device program after partitioning:
+shapes are per-shard, collectives are explicit.  XLA's
+``cost_analysis()`` counts while bodies ONCE (verified empirically), so
+we parse the text ourselves:
+
+  * computations + per-computation symbol table (op name -> shape),
+  * a call graph (while body/condition, fusion calls, to_apply,
+    conditional branches) with execution multipliers — while trip counts
+    are recovered from the largest integer constant in the loop's
+    condition computation (lax.scan emits static bounds); dynamic-bound
+    loops (e.g. flash attention's causal kv fori) fall back to a
+    caller-supplied multiplier,
+  * dot FLOPs = 2 · |result| · |contracted dims| · multiplier,
+  * collective bytes = payload bytes · ring factor · multiplier
+    (all-reduce 2·(n-1)/n ≈ 2, others ≈ 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s"
+                    r"([a-z][a-z0-9\-]*)\(")
+_CALL_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)|branches=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    type_str: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict          # op name -> type_str
+
+
+def parse_module(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    head_re = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+    for line in text.splitlines():
+        if cur is None:
+            m = head_re.match(line)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, kind = m.groups()
+            cur.symbols[name] = type_str
+            cur.ops.append(Op(name, kind, type_str, line.strip()))
+    if cur is not None:
+        comps[cur.name] = cur
+    return {"computations": comps, "entry": entry}
+
+
+def _while_trip(cond: Computation) -> int | None:
+    """Static trip count: scan conditions compare the counter against a
+    constant; take the largest integer constant found."""
+    best = None
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.line)
+            if m:
+                v = int(m.group(1))
+                if v > 0 and (best is None or v > best):
+                    best = v
+    return best
+
+
+def execution_multipliers(mod: dict, dynamic_trip: float = 1.0) -> dict:
+    """computation name -> times executed per step."""
+    comps = mod["computations"]
+    mult: dict[str, float] = defaultdict(float)
+    entry = mod["entry"]
+    if entry is None:
+        return {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] += m
+        comp = comps[name]
+        for op in comp.ops:
+            trips = 1.0
+            if op.kind == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", op.line)
+                cdm = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                body = bm.group(1) if bm else None
+                cond = cdm.group(1) if cdm else None
+                t = None
+                if cond and cond in comps:
+                    t = _while_trip(comps[cond])
+                trips = float(t) if t else dynamic_trip
+                if body:
+                    visit(body, m * trips)
+                if cond:
+                    visit(cond, m * (trips + 1))
+                continue
+            for g in _CALL_RE.finditer(op.line):
+                if g.group(1):
+                    visit(g.group(1), m)
+                elif g.group(2):
+                    for b in _OPERAND_RE.findall(g.group(2)):
+                        visit(b, m)
+
+    visit(entry, 1.0)
+    return dict(mult)
+
+
+def _dot_flops(op: Op, symbols: dict) -> float:
+    out_dims = _shape_dims(op.type_str)
+    if out_dims is None:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+    # first operand name after "dot("
+    call = op.line.split(" dot(", 1)[-1] if " dot(" in op.line else ""
+    ops_names = _OPERAND_RE.findall(call.split(")", 1)[0])
+    contract = 1
+    if ops_names:
+        lhs_type = symbols.get(ops_names[0])
+        if lhs_type:
+            ld = _shape_dims(lhs_type) or []
+            for c in cdims:
+                if c < len(ld):
+                    contract *= ld[c]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * contract
+
+
+def analyze(text: str, dynamic_trip: float = 1.0) -> dict:
+    """Per-device totals: dot flops, collective bytes by kind, op counts."""
+    mod = parse_module(text)
+    mult = execution_multipliers(mod, dynamic_trip)
+    flops = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_count: dict[str, float] = defaultdict(float)
+    top: list[tuple[float, str]] = []
+    for cname, comp in mod["computations"].items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.kind == "dot":
+                flops += m * _dot_flops(op, comp.symbols)
+            elif op.kind in COLLECTIVES:
+                payload = _shape_bytes(op.type_str)
+                factor = 2.0 if op.kind == "all-reduce" else 1.0
+                coll_bytes[op.kind] += m * payload * factor
+                coll_count[op.kind] += m
+                top.append((m * payload * factor,
+                            f"{op.kind} x{m:.0f} {op.type_str[:60]}"))
+    top.sort(reverse=True)
+    return {
+        "dot_flops": flops,
+        "collective_bytes": dict(coll_bytes),
+        "collective_bytes_total": float(sum(coll_bytes.values())),
+        "collective_counts": dict(coll_count),
+        "top_collectives": [f"{b/1e9:.2f}GB {d}" for b, d in top[:10]],
+    }

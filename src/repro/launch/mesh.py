@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — "pod"
+crosses the DCN; it joins "data" for batch/FSDP sharding so only
+gradient reductions and FSDP gathers traverse the slow links.
+
+Functions, not module constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Axes used for batch/FSDP sharding (everything but "model")."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Small mesh over however many (possibly fake) local devices exist —
+    used by tests and examples."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,246 @@
+"""Sharding policy: param/optimizer/batch/cache PartitionSpecs.
+
+Policy (MaxText-style FSDP+TP, DESIGN.md §6):
+  * "model" axis = tensor parallel: attention heads, FFN hidden, MoE
+    experts, vocab.
+  * batch axes ("pod","data") = FSDP: every weight is additionally
+    sharded on its largest remaining dim; optimizer moments inherit the
+    param spec => ZeRO-3.
+  * activations: batch over ("pod","data"); for batch-1 decode cells the
+    KV-cache sequence dim takes the batch axes instead (sequence
+    parallelism over the cache).
+
+Every rule is divisibility-guarded: if a dim doesn't divide by the axis
+size the axis is dropped (e.g. seamless's vocab 256206 is indivisible by
+16 — its embedding shards on d_model instead).  Rules are name-based on
+the param-tree path; unknown leaves fall back to greedy largest-dim
+assignment.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None or axes == ():
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _assign(shape, mesh, prefs):
+    """prefs: [(dim, [axis-candidates in priority order]), ...] —
+    divisibility-guarded greedy assignment."""
+    spec: list[Any] = [None] * len(shape)
+    used: set[str] = set()
+    for dim, candidates in prefs:
+        if dim >= len(shape):
+            continue
+        for axes in candidates:
+            flat = (axes,) if isinstance(axes, str) else tuple(axes)
+            if not flat or any(a in used for a in flat):
+                continue
+            if shape[dim] % _axis_size(mesh, axes) == 0:
+                spec[dim] = axes
+                used.update(flat)
+                break
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# rules: regex on path -> function(shape_without_stack_dim) -> prefs
+def _param_prefs(name: str, nd: int, fsdp, model, heads_ok=True, kv_ok=True):
+    """Returns (dim, candidates) prefs for the *unstacked* shape.
+
+    heads_ok/kv_ok: whether the (q / kv) head count divides the model
+    axis — if not, the projection must NOT be sharded on its head dim
+    (sharding head_dim instead would force per-tile all-gathers of the
+    attention accumulators; MQA replicates KV instead)."""
+    both = tuple((fsdp if isinstance(fsdp, tuple) else (fsdp,))) + (model,)
+    if re.search(r"embed/table$", name):
+        # (V, D): vocab->model, d->fsdp; indivisible vocab falls through
+        # to sharding D over everything
+        return [(0, [model]), (1, [fsdp, both])]
+    if re.search(r"lm_head/w$", name):
+        return [(1, [model]), (0, [fsdp])]
+    if re.search(r"(attn|cross)/wq$", name):
+        return [(1, [model]), (0, [fsdp])] if heads_ok else [(0, [fsdp])]
+    if re.search(r"(attn|cross)/w[kv]$", name):
+        return [(1, [model]), (0, [fsdp])] if kv_ok else [(0, [fsdp])]
+    if re.search(r"(attn|cross)/wo$", name):
+        return [(0, [model]), (1, [fsdp])] if heads_ok else [(1, [fsdp])]
+    if re.search(r"(attn|cross)/bq$", name):
+        return [(0, [model])] if heads_ok else []
+    if re.search(r"(attn|cross)/b[kv]$", name):
+        return [(0, [model])] if kv_ok else []
+    if re.search(r"moe/router$", name):
+        return [(0, [fsdp])]
+    # Expert weights: experts -> model (EP) and the expert hidden dim ->
+    # batch axes (TP-style).  NOT FSDP on d_model: FSDP would all-gather
+    # the full expert set 3×accum times per step (fwd/bwd/remat) — for a
+    # 480B MoE that is TBs of gathers; sharding F keeps weights resident
+    # and moves only (E,C,D) partial sums (§Perf arctic H2).
+    if re.search(r"moe/(gate|up)$", name):          # (E, D, F)
+        return [(0, [model]), (2, [fsdp])]
+    if re.search(r"moe/down$", name):               # (E, F, D)
+        return [(0, [model]), (1, [fsdp])]
+    if re.search(r"(mlp|shared|dense)/(gate|up)$", name):
+        return [(1, [model]), (0, [fsdp])]
+    if re.search(r"(mlp|shared|dense)/down$", name):
+        return [(0, [model]), (1, [fsdp])]
+    if re.search(r"mamba/in_proj$", name):
+        return [(1, [model]), (0, [fsdp])]
+    if re.search(r"mamba/out_proj$", name):
+        return [(0, [model]), (1, [fsdp])]
+    if re.search(r"mamba/conv_[wb]$", name):
+        return [(nd - 1, [model])]
+    if re.search(r"mamba/(A_log|D|dt_bias)$", name):
+        return [(0, [model])]
+    if re.search(r"(mlstm/qkv|mlstm/ogate|slstm/wx)$", name):
+        return [(1, [model]), (0, [fsdp])]
+    if re.search(r"(mlstm|slstm)/out$", name):
+        return [(0, [model]), (1, [fsdp])]
+    if re.search(r"slstm/r$", name):                # (H, P, 4P)
+        return [(2, [model]), (1, [fsdp])]
+    if re.search(r"mlstm/gates$", name):
+        return [(0, [fsdp])]
+    if re.search(r"(norm|scale|bias)", name):
+        return []
+    # fallback: greedy largest dims
+    return None
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh: Mesh,
+                fsdp_enabled: bool = True, attn_tp: bool = True):
+    """Pytree of PartitionSpec matching a params (or ShapeDtypeStruct)
+    tree.
+
+    fsdp_enabled=False (decode/serving): weights are sharded on the
+    model axis only and *replicated* across the batch axes — a decode
+    step touches every weight, so FSDP would re-gather the full model
+    per generated token.
+    """
+    fsdp = batch_axes(mesh) if fsdp_enabled else ()
+    fsdp = fsdp[0] if len(fsdp) == 1 else fsdp
+    model = "model"
+    msize = mesh.shape["model"]
+    heads_ok = cfg.n_heads % msize == 0 and attn_tp
+    kv_ok = cfg.n_kv_heads % msize == 0 and attn_tp
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        # scanned stacks carry a leading group dim: never shard it
+        stacked = bool(re.search(r"/blocks/", name))
+        base_shape = shape[1:] if stacked else shape
+        prefs = _param_prefs(name, len(base_shape), fsdp, model,
+                             heads_ok, kv_ok)
+        if prefs is None:
+            order = sorted(range(len(base_shape)),
+                           key=lambda i: -base_shape[i])
+            prefs = []
+            if order:
+                prefs.append((order[0], [model]))
+            if len(order) > 1:
+                prefs.append((order[1], [fsdp]))
+        if stacked:
+            prefs = [(d + 1, c) for d, c in prefs]
+        return _assign(shape, mesh, prefs)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def opt_state_specs(cfg: ModelConfig, pspecs):
+    return {
+        "m": pspecs,
+        "v": pspecs,
+        "step": P(),
+    }
+
+
+def batch_specs(batch_shape, mesh: Mesh):
+    axes = batch_axes(mesh)
+
+    def spec_for(leaf):
+        # suffix fallback: small global batches shard over the inner
+        # batch axes (e.g. batch 32 on ("pod","data")=2×32 -> "data")
+        cand = axes
+        while cand and (not leaf.shape
+                        or leaf.shape[0] % _axis_size(mesh, cand)):
+            cand = cand[1:]
+        if not cand:
+            return P()
+        return P(cand if len(cand) > 1 else cand[0])
+
+    return jax.tree.map(spec_for, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh):
+    """KV caches: batch->fsdp axes when divisible, else sequence->fsdp
+    (sequence-parallel cache for batch-1 long-context decode); kv-heads /
+    ssm-heads -> model."""
+    fsdp = batch_axes(mesh)
+    fsdp = fsdp[0] if len(fsdp) == 1 else fsdp
+    fsdp_n = _axis_size(mesh, fsdp)
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        stacked = name.startswith("blocks/")
+        off = 1 if stacked else 0
+        base = shape[off:]
+        prefs: list = []
+        last = name.rsplit("/", 1)[-1]
+        if last in ("k", "v", "ck", "cv"):       # (B, S, KV, hd)
+            # batch -> fsdp axes (sequence for batch-1 long-context);
+            # kv-heads -> model when divisible, else sequence -> model
+            # (paired with attn_tp=False weights so attention einsums
+            # never regather the cache)
+            if base[0] % fsdp_n == 0:
+                prefs = [(0, [fsdp]), (2, ["model"]), (1, ["model"])]
+            else:
+                prefs = [(1, [fsdp]), (2, ["model"]), (1, ["model"])]
+        elif last == "state":                     # mamba (B, H, P, N)
+            prefs = [(0, [fsdp]), (1, ["model"])]
+        elif last == "conv":                      # (B, K-1, conv_dim)
+            prefs = [(0, [fsdp]), (2, ["model"])]
+        elif last in ("c", "n", "h", "m"):        # xlstm states
+            prefs = [(0, [fsdp])]
+            if len(base) >= 3:
+                prefs.append((2, ["model"]))
+        elif last == "enc_out":                   # (B, S, D)
+            prefs = [(0, [fsdp]), (2, ["model"])]
+        elif last == "pos":
+            prefs = []
+        if stacked:
+            prefs = [(d + 1, c) for d, c in prefs]
+        return _assign(shape, mesh, prefs)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,48 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
+        --steps 200 --checkpoint-dir /tmp/ckpt [--restore] [--fail-at 50]
+
+On real hardware the same entry point runs the full config over the
+production mesh (launch.mesh); on this CPU container use --reduced.
+``--fail-at N`` injects a node failure at step N (fault-tolerance demo:
+rerun with --restore to resume from the latest atomic checkpoint).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import ARCH_IDS, get_config, get_reduced
+from repro.train.loop import FailureInjector, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma-2b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=20)
+    ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    tcfg = TrainerConfig(
+        steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        q_chunk=min(128, args.seq_len),
+    )
+    trainer = Trainer(cfg, tcfg)
+    injector = FailureInjector(args.fail_at) if args.fail_at else None
+    state, history = trainer.run(injector=injector, restore=args.restore)
+    print(f"final loss: {history[-1]:.4f} (from {history[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

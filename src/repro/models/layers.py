@@ -1,0 +1,110 @@
+"""Shared building blocks: norms, MLPs, rotary embeddings, embedding
+tables.  Raw-JAX (no flax): params are nested dicts of arrays, layers
+are pure functions, initializers mirror standard LM practice
+(truncated-normal fan-in scaling).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): silu (SwiGLU), geglu, gelu
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, f: int, activation: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": normal_init(k2, (f, d), dtype)}
+    if activation in ("silu", "geglu"):
+        p["gate"] = normal_init(k1, (d, f), dtype)
+        p["up"] = normal_init(k3, (d, f), dtype)
+    else:
+        p["up"] = normal_init(k1, (d, f), dtype)
+    return p
+
+
+def mlp(params: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    from repro.models.partitioning import constrain
+
+    if activation == "silu":
+        h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    elif activation == "geglu":
+        h = jax.nn.gelu(x @ params["gate"], approximate=True) * (x @ params["up"])
+    else:
+        h = jax.nn.gelu(x @ params["up"], approximate=True)
+    if h.ndim == 3:
+        h = constrain(h, ("batch", None, "model"))
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> dict:
+    # std 1/sqrt(d): the sqrt(d) forward scaling then yields a unit-variance
+    # residual stream AND unit-variance tied-unembed logits.
+    return {"table": normal_init(key, (vocab, d), dtype, scale=d**-0.5)}
+
+
+def embed(params: dict, tokens: jnp.ndarray, d: int) -> jnp.ndarray:
+    out = jnp.take(params["table"], tokens, axis=0)
+    return out * jnp.asarray(math.sqrt(d), out.dtype)  # gemma-style scaling
+
+
+def unembed(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["table"].T
+
+
+def softcap(logits: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)

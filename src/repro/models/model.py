@@ -1,0 +1,406 @@
+"""Config-driven composable LM covering all ten assigned architectures.
+
+Layer stacking: the layer-kind sequence (cfg.layer_kind) is periodic for
+every assigned arch; layers are grouped into super-blocks of one period
+and scanned with ``lax.scan`` over the group axis — compile time is
+O(period), independent of depth (62-layer gemma3 compiles as fast as a
+2-layer toy).  Remainder layers (depth % period) run unrolled after the
+scan.  zamba2's *shared-weight* attention block is a closure over a
+single (non-scanned) param subtree applied once per super-block.
+
+Caches mirror the same grouping so decode scans the exact structure the
+prefill produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.layers import (
+    embed,
+    embed_init,
+    mlp,
+    mlp_init,
+    normal_init,
+    rmsnorm,
+    rmsnorm_init,
+    softcap,
+    unembed,
+)
+from repro.models.partitioning import constrain
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+
+def layer_plan(cfg: ModelConfig, depth: int | None = None):
+    """(period, n_groups, remainder_kinds) for the scan structure."""
+    depth = depth if depth is not None else cfg.n_layers
+    kinds = [cfg.layer_kind(i) for i in range(depth)]
+    if cfg.shared_attn_period:
+        period = cfg.shared_attn_period
+    else:
+        period = 1
+        for p in range(1, len(set(kinds)) * 4 + 1):
+            if all(kinds[i] == kinds[i % p] for i in range(depth)):
+                period = p
+                break
+    n_groups = depth // period
+    return period, n_groups, kinds[n_groups * period :]
+
+
+def _dims(cfg: ModelConfig) -> A.AttnDims:
+    return A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+
+
+def cast_params(params, dtype):
+    """Compute-dtype view of the (f32 master) parameters — the mixed
+    precision boundary.  Gradients flow back through the cast, so the
+    optimizer still updates masters in f32."""
+    dt = jnp.dtype(dtype)
+
+    def c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype != dt:
+            return x.astype(dt)
+        return x
+
+    return jax.tree.map(c, params)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str, dtype, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: dict[str, Any] = {"norm1": rmsnorm_init(d, dtype)}
+    if kind.startswith("attn"):
+        p["attn"] = A.attn_init(ks[0], d, _dims(cfg), dtype,
+                                cfg.qkv_bias, cfg.qk_norm)
+        if cross:
+            p["norm_cross"] = rmsnorm_init(d, dtype)
+            p["cross"] = A.attn_init(ks[1], d, _dims(cfg), dtype)
+        if cfg.moe is not None:
+            p["norm2"] = rmsnorm_init(d, dtype)
+            p["moe"] = MOE.moe_init(ks[2], d, cfg.moe, cfg.activation, dtype)
+        elif cfg.d_ff:
+            p["norm2"] = rmsnorm_init(d, dtype)
+            p["mlp"] = mlp_init(ks[2], d, cfg.d_ff, cfg.activation, dtype)
+    elif kind == "mamba2":
+        p["mamba"] = SSM.mamba2_init(ks[0], d, cfg.ssm_state,
+                                     cfg.ssm_head_dim, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = XL.mlstm_init(ks[0], d, cfg.n_heads, dtype)
+    elif kind == "slstm":
+        p["slstm"] = XL.slstm_init(ks[0], d, cfg.n_heads, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _stack_init(key, cfg: ModelConfig, depth: int, cross: bool):
+    """Scanned super-block params + unrolled tail params."""
+    period, n_groups, tail_kinds = layer_plan(cfg, depth)
+    keys = jax.random.split(key, depth + 1)
+
+    def group_params(g):
+        return tuple(
+            _layer_init(keys[g * period + j], cfg, cfg.layer_kind(g * period + j),
+                        jnp.dtype(cfg.param_dtype), cross)
+            for j in range(period)
+        )
+
+    groups = [group_params(g) for g in range(n_groups)]
+    # stack along a new leading axis
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *groups) if n_groups > 1 \
+        else jax.tree.map(lambda x: x[None], groups[0])
+    tail = [
+        _layer_init(keys[n_groups * period + j], cfg,
+                    cfg.layer_kind(n_groups * period + j),
+                    jnp.dtype(cfg.param_dtype), cross)
+        for j in range(len(tail_kinds))
+    ]
+    return {"blocks": blocks, "tail": tail}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    params: dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "decoder": _stack_init(ks[1], cfg, cfg.n_layers, cross=cfg.is_enc_dec),
+    }
+    if cfg.shared_attn_period:
+        params["shared_attn"] = _layer_init(ks[2], cfg, "attn", dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": normal_init(ks[3], (cfg.d_model, cfg.vocab_size), dtype)
+        }
+    if cfg.is_enc_dec:
+        enc_cfg = dataclasses.replace(
+            cfg, moe=None, block_pattern=None, local_global_period=None,
+            shared_attn_period=0,
+        )
+        params["encoder"] = _stack_init(ks[4], enc_cfg, cfg.encoder_layers,
+                                        cross=False)
+        params["enc_final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_sublayer(p, cfg: ModelConfig, x, kind, positions, causal, enc_out,
+                   q_chunk):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    q, k, v = A.qkv(p["attn"], h, _dims(cfg), positions, cfg.rope_theta,
+                    cfg.qk_norm)
+    window = cfg.sliding_window if kind == "attn_local" else None
+    out = A.flash_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=q_chunk, kv_chunk=q_chunk)
+    b, s = x.shape[:2]
+    out = constrain(out.reshape(b, s, -1), ("batch", None, "model"))
+    x = constrain(x + out @ p["attn"]["wo"], ("batch", None, None))
+
+    if "cross" in p and enc_out is not None:
+        h = rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        q, _, _ = A.qkv(p["cross"], h, _dims(cfg), positions, 0.0)
+        ek = (enc_out @ p["cross"]["wk"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        ev = (enc_out @ p["cross"]["wv"]).reshape(ek.shape)
+        out = A.flash_attention(q, ek, ev, causal=False, q_chunk=q_chunk,
+                                kv_chunk=q_chunk)
+        x = x + out.reshape(b, s, -1) @ p["cross"]["wo"]
+
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, aux = MOE.moe_apply(p["moe"], h, cfg.moe, cfg.activation)
+        x = x + y
+    elif "mlp" in p:
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h, cfg.activation)
+    return x, aux
+
+
+def _layer_fwd(p, cfg: ModelConfig, x, kind, positions, causal, enc_out,
+               q_chunk):
+    """One layer, training/prefill mode.  Returns (x, aux)."""
+    if kind.startswith("attn"):
+        x, aux = _attn_sublayer(p, cfg, x, kind, positions, causal, enc_out,
+                                q_chunk)
+        return x, aux
+    if kind == "mamba2":
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, _, _ = SSM.mamba2_apply(p["mamba"], h, n_state=cfg.ssm_state,
+                                   head_dim=cfg.ssm_head_dim)
+        return x + y, jnp.zeros((), jnp.float32)
+    if kind == "mlstm":
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, _ = XL.mlstm_apply(p["mlstm"], h, n_heads=cfg.n_heads)
+        return x + y, jnp.zeros((), jnp.float32)
+    if kind == "slstm":
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, _ = XL.slstm_apply(p["slstm"], h, n_heads=cfg.n_heads)
+        return x + y, jnp.zeros((), jnp.float32)
+    raise ValueError(kind)
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _run_stack(stack, cfg: ModelConfig, x, *, depth, causal, enc_out=None,
+               shared_attn=None, q_chunk=1024):
+    period, n_groups, tail_kinds = layer_plan(cfg, depth)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+
+    def super_block(x, block_params):
+        x = constrain(x, ("batch", None, None))
+        aux = jnp.zeros((), jnp.float32)
+        for j in range(period):
+            kind = cfg.layer_kind(j)  # periodic: kind depends on j only
+            xj, auxj = _layer_fwd(block_params[j], cfg, x, kind, positions,
+                                  causal, enc_out, q_chunk)
+            x, aux = xj, aux + auxj
+        if shared_attn is not None:
+            x, auxs = _attn_sublayer(shared_attn, cfg, x, "attn", positions,
+                                     causal, enc_out, q_chunk)
+            aux = aux + auxs
+        return x, aux
+
+    wrapped = _remat_wrap(super_block, cfg)
+
+    def scan_body(x, block_params):
+        return wrapped(x, block_params)
+
+    x, auxs = jax.lax.scan(scan_body, x, stack["blocks"])
+    aux = jnp.sum(auxs)
+    for j, kind in enumerate(tail_kinds):
+        x, auxj = _layer_fwd(stack["tail"][j], cfg, x, kind, positions,
+                             causal, enc_out, q_chunk)
+        aux = aux + auxj
+    return x, aux
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray | None = None,
+    *,
+    embeds: jnp.ndarray | None = None,
+    enc_tokens: jnp.ndarray | None = None,
+    enc_embeds: jnp.ndarray | None = None,
+    q_chunk: int = 1024,
+):
+    """Full forward pass -> (logits, aux).  ``embeds`` bypasses the token
+    embedding (modality-frontend stub per the assignment)."""
+    adt = jnp.dtype(cfg.activation_dtype)
+    params = cast_params(params, adt)
+    if embeds is None:
+        x = embed(params["embed"], tokens, cfg.d_model).astype(adt)
+    else:
+        x = embeds.astype(adt)
+
+    enc_out = None
+    if cfg.is_enc_dec:
+        if enc_embeds is None:
+            e = embed(params["embed"], enc_tokens, cfg.d_model).astype(adt)
+        else:
+            e = enc_embeds.astype(adt)
+        enc_cfg = dataclasses.replace(
+            cfg, moe=None, block_pattern=None, local_global_period=None,
+            shared_attn_period=0,
+        )
+        enc_out, _ = _run_stack(params["encoder"], enc_cfg, e,
+                                depth=cfg.encoder_layers, causal=False,
+                                q_chunk=q_chunk)
+        enc_out = rmsnorm(params["enc_final_norm"], enc_out, cfg.norm_eps)
+
+    x, aux = _run_stack(
+        params["decoder"], cfg, x, depth=cfg.n_layers, causal=True,
+        enc_out=enc_out, shared_attn=params.get("shared_attn"),
+        q_chunk=q_chunk,
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = x @ params["lm_head"]["w"]
+    logits = constrain(logits, ("batch", None, "model"))
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap), aux
+
+
+def forward_hidden(
+    params,
+    cfg: ModelConfig,
+    tokens=None,
+    *,
+    embeds=None,
+    enc_tokens=None,
+    enc_embeds=None,
+    q_chunk: int = 1024,
+):
+    """Forward pass up to (and including) the final norm -> (x, aux)."""
+    adt = jnp.dtype(cfg.activation_dtype)
+    params = cast_params(params, adt)
+    if embeds is None:
+        x = embed(params["embed"], tokens, cfg.d_model).astype(adt)
+    else:
+        x = embeds.astype(adt)
+
+    enc_out = None
+    if cfg.is_enc_dec:
+        if enc_embeds is None:
+            e = embed(params["embed"], enc_tokens, cfg.d_model).astype(adt)
+        else:
+            e = enc_embeds.astype(adt)
+        enc_cfg = dataclasses.replace(
+            cfg, moe=None, block_pattern=None, local_global_period=None,
+            shared_attn_period=0,
+        )
+        enc_out, _ = _run_stack(params["encoder"], enc_cfg, e,
+                                depth=cfg.encoder_layers, causal=False,
+                                q_chunk=q_chunk)
+        enc_out = rmsnorm(params["enc_final_norm"], enc_out, cfg.norm_eps)
+
+    x, aux = _run_stack(
+        params["decoder"], cfg, x, depth=cfg.n_layers, causal=True,
+        enc_out=enc_out, shared_attn=params.get("shared_attn"),
+        q_chunk=q_chunk,
+    )
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, q_chunk: int = 1024,
+            ce_chunk: int = 256):
+    """Next-token cross-entropy (+ MoE aux), computed in sequence chunks
+    so the (B, S, V) f32 logits never materialize (the unembed of a 256k
+    vocab at 4k seq would otherwise dominate per-chip memory).  Each
+    chunk is rematerialized in the backward pass."""
+    x, aux = forward_hidden(
+        params, cfg,
+        batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        enc_tokens=batch.get("enc_tokens"),
+        enc_embeds=batch.get("enc_embeds"),
+        q_chunk=q_chunk,
+    )
+    labels = batch["labels"]
+    if cfg.tie_embeddings:
+        table = cast_params(params["embed"]["table"], cfg.activation_dtype)
+        unemb = lambda h: h @ table.T                      # noqa: E731
+    else:
+        w = cast_params(params["lm_head"]["w"], cfg.activation_dtype)
+        unemb = lambda h: h @ w                            # noqa: E731
+
+    @jax.checkpoint
+    def chunk_nll(xc, lc):
+        logits = constrain(unemb(xc), ("batch", None, "model"))
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+
+    b, s, _ = x.shape
+    cc = min(ce_chunk, s)
+    if s % cc:
+        cc = s  # fall back to one chunk for odd lengths
+    nc = s // cc
+    xs = x.reshape(b, nc, cc, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, cc).transpose(1, 0, 2)
+
+    def scan_body(carry, inp):
+        tot, cnt = carry
+        xc, lc = inp
+        t, c = chunk_nll(xc, lc)
+        return (tot + t, cnt + c), None
+
+    # data-dependent zero so the carry is device-varying under shard_map
+    zero = (x.reshape(-1)[0] * 0).astype(jnp.float32)
+    (tot, cnt), _ = jax.lax.scan(scan_body, (zero, zero), (xs, ls))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + 0.01 * aux, {"loss": loss, "aux": aux}

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity,
+deepseek-style shared experts, arctic-style dense residual branch.
+
+Dispatch uses the SPMD-friendly one-hot einsum formulation (tokens stay
+data-sharded, experts model-sharded; XLA reduces the contraction over
+the data axis).  The dispatch mask is O(B·Cs·E·C) — quadratic in the
+chunk length Cs — so routing is scanned over sequence chunks of
+``router_chunk`` tokens, which bounds both the mask memory and the
+dispatch-einsum FLOP overhead (≈ Cs·K·cf·D FLOPs/token, ~4% of expert
+FLOPs at Cs=256 for deepseek-moe).  Chunking makes the capacity limit
+per-chunk rather than per-sequence; with capacity_factor ≥ 1.25 the
+drop statistics are equivalent in expectation (documented deviation).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import mlp, mlp_init, normal_init
+from repro.models.partitioning import constrain
+
+
+def moe_init(key, d: int, cfg: MoEConfig, activation: str, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    e, f = cfg.n_experts, cfg.d_expert
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": normal_init(ks[0], (d, e), jnp.float32),
+        "gate": (jax.random.truncated_normal(ks[1], -2, 2, (e, d, f)) * scale
+                 ).astype(dtype),
+        "up": (jax.random.truncated_normal(ks[2], -2, 2, (e, d, f)) * scale
+               ).astype(dtype),
+        "down": (jax.random.truncated_normal(ks[3], -2, 2, (e, f, d))
+                 * (1.0 / math.sqrt(f))).astype(dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = mlp_init(ks[4], d, cfg.n_shared * f, activation, dtype)
+    if cfg.dense_residual_ff:
+        p["dense"] = mlp_init(ks[5], d, cfg.dense_residual_ff, activation, dtype)
+    return p
+
+
+def _capacity(tokens_per_expert: float, cf: float) -> int:
+    c = math.ceil(tokens_per_expert * cf)
+    return max(4, math.ceil(c / 4) * 4)
+
+
+def _route_chunk(params, x, cfg: MoEConfig, activation):
+    """x: (B, Cs, D) -> (B, Cs, D), aux metrics."""
+    b, cs, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cs * k / e, cfg.capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ params["router"])          # (B,Cs,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)                   # (B,Cs,K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)      # (B,Cs,K,E)
+    # position of each assignment within its expert (per batch row)
+    flat = onehot.reshape(b, cs * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (B,Cs*K,E)
+    pos = pos.reshape(b, cs, k, e)
+    within = pos < cap
+
+    # per-assignment (expert, slot) index; overflow gets a sentinel that
+    # one_hot maps to all-zeros.  Accumulating over the K assignments keeps
+    # the peak intermediate at (B,Cs,E·C) instead of (B,Cs,K,E,C).
+    pos_k = jnp.sum(pos * onehot, axis=-1)                       # (B,Cs,K)
+    valid = jnp.sum(within * onehot, axis=-1)                    # (B,Cs,K)
+    comb_idx = jnp.where(valid > 0, gate_idx * cap + pos_k.astype(jnp.int32),
+                         e * cap)
+    dispatch = jnp.zeros((b, cs, e * cap), jnp.float32)
+    combine = jnp.zeros((b, cs, e * cap), jnp.float32)
+    for kk in range(k):
+        oh = jax.nn.one_hot(comb_idx[..., kk], e * cap, dtype=jnp.float32)
+        dispatch = dispatch + oh
+        combine = combine + oh * gate_w[..., kk : kk + 1]
+    dispatch = constrain(dispatch.reshape(b, cs, e, cap),
+                         ("batch", None, "model", None))
+    combine = constrain(combine.reshape(b, cs, e, cap),
+                        ("batch", None, "model", None))
+
+    xe = jnp.einsum("bsec,bsd->ecd", dispatch.astype(x.dtype), x)  # (E,C,D)
+    xe = constrain(xe, ("model", None, None))
+    if activation in ("silu", "geglu"):
+        act = jax.nn.silu if activation == "silu" else (
+            lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(jnp.einsum("ecd,edf->ecf", xe, params["gate"])) * jnp.einsum(
+            "ecd,edf->ecf", xe, params["up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, params["up"]),
+                        approximate=True)
+    # expert hidden: F rides the batch axes (matches the weight TP
+    # sharding; an unsharded-F constraint here would force the backward
+    # to all-gather the down weights over F — §Perf arctic H2b)
+    h = constrain(h, ("model", None, "batch"))
+    ye = constrain(jnp.einsum("ecf,efd->ecd", h, params["down"]),
+                   ("model", None, None))                          # (E,C,D)
+    y = jnp.einsum("bsec,ecd->bsd", combine.astype(x.dtype), ye)   # (B,Cs,D)
+    y = constrain(y, ("batch", None, None))
+
+    # load-balance auxiliaries (Switch-style)
+    me = jnp.mean(onehot.sum(2).reshape(-1, e), axis=0)
+    pe = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux = e * jnp.sum(me * pe)
+    return y, aux
+
+
+def moe_apply(params, x: jnp.ndarray, cfg: MoEConfig, activation: str):
+    """x: (B, S, D) -> (B, S, D); scans routing over seq chunks."""
+    b, s0, d = x.shape
+    cs = min(cfg.router_chunk, s0)
+    # pad to a chunk multiple; pad tokens only dilute capacity in the
+    # final chunk and their outputs are sliced off
+    s = math.ceil(s0 / cs) * cs
+    x = jnp.pad(x, ((0, 0), (0, s - s0), (0, 0))) if s != s0 else x
+    n = s // cs
+
+    if n == 1:
+        y, aux = _route_chunk(params, x, cfg, activation)
+    else:
+        xs = x.reshape(b, n, cs, d).transpose(1, 0, 2, 3)
+
+        def step(_, xc):
+            yc, aux_c = _route_chunk(params, xc, cfg, activation)
+            return None, (yc, aux_c)
+
+        _, (ys, auxs) = jax.lax.scan(step, None, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+        aux = jnp.mean(auxs)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, activation)
+    if "dense" in params:
+        y = y + mlp(params["dense"], x, activation)
+    return y[:, :s0], aux

@@ -1,0 +1,117 @@
+"""Activation-sharding constraints (logical axes -> mesh axes).
+
+XLA's sharding propagation replicates large intermediates it cannot
+infer (flash-attention carries, MoE dispatch masks) — on a 256-chip mesh
+that turns GB-scale temporaries into per-device copies and inserts
+whole-activation all-reduces.  The launcher installs a policy
+(mesh + batch axes); model code marks intermediates with logical dims:
+
+    x = constrain(x, ("batch", None, "model"))
+
+Every constraint is divisibility-guarded: a logical axis whose dim size
+doesn't divide the mesh-axis size is dropped (e.g. MQA's single KV head
+is replicated rather than sharded).  Without an installed policy (unit
+tests, single-device runs) `constrain` is a no-op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    mesh: Any
+    batch_axes: tuple    # mesh axes used for batch/fsdp
+    model_axis: str = "model"
+
+    def axis_size(self, logical: str) -> int:
+        if logical == "batch":
+            return math.prod(self.mesh.shape[a] for a in self.batch_axes)
+        if logical == "model":
+            return self.mesh.shape[self.model_axis]
+        return 1
+
+    def mesh_axes(self, logical: str):
+        if logical == "batch":
+            return (self.batch_axes if len(self.batch_axes) > 1
+                    else self.batch_axes[0])
+        if logical == "model":
+            return self.model_axis
+        return None
+
+
+def set_policy(policy: Policy | None):
+    _STATE.policy = policy
+
+
+def get_policy() -> Policy | None:
+    return getattr(_STATE, "policy", None)
+
+
+class apply_policy:
+    """Context manager used by launchers around trace/lower calls."""
+
+    def __init__(self, policy: Policy | None):
+        self.policy = policy
+
+    def __enter__(self):
+        self.prev = get_policy()
+        set_policy(self.policy)
+        return self.policy
+
+    def __exit__(self, *exc):
+        set_policy(self.prev)
+
+
+def constrain(x, dims, free: bool = False):
+    """dims: per-axis logical name ("batch" | "model" | None).
+
+    free=True leaves unpinned dims UNCONSTRAINED (XLA may shard them as
+    it likes) instead of forcing replication — used for tensors whose
+    best extra sharding is architecture-dependent (e.g. flash-attention
+    accumulators when the head count doesn't divide the model axis)."""
+    pol = get_policy()
+    if pol is None:
+        return x
+    if len(dims) != x.ndim:
+        raise ValueError(f"dims {dims} vs shape {x.shape}")
+    fill = P.UNCONSTRAINED if free else None
+    used = set()
+    spec = []
+    for d, size in zip(dims, x.shape):
+        if d is None or d in used:
+            spec.append(fill)
+            continue
+        if d == "batch":
+            # suffix fallback: a batch smaller than the full batch-axes
+            # product still shards over the inner axes (e.g. global
+            # batch 32 on ("pod","data")=64 -> shard over "data")
+            axes = pol.batch_axes
+            while axes and size % math.prod(
+                    pol.mesh.shape[a] for a in axes):
+                axes = axes[1:]
+            if not axes:
+                spec.append(fill)
+                continue
+            spec.append(axes if len(axes) > 1 else axes[0])
+            used.add(d)
+        elif size % pol.axis_size(d) == 0:
+            spec.append(pol.mesh_axes(d))
+            used.add(d)
+        else:
+            spec.append(fill)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, P(*spec)))
+
+
+def constrain_tree(tree, dims_fn):
+    """Constrain every array leaf; dims_fn(leaf) -> dims tuple."""
+    return jax.tree.map(lambda x: constrain(x, dims_fn(x)), tree)

@@ -1,0 +1,174 @@
+"""Mamba2 (state-space dual) block — the SSM layer of zamba2-7b.
+
+Chunked SSD algorithm (Dao & Gu 2024, minimal form): the sequence is
+scanned in chunks of L tokens; within a chunk the quadratic (L×L)
+decay-masked form runs dense (MXU-friendly), across chunks only the
+(H, P, N) state is carried — the same VMEM-residency reasoning as the
+paper's fused filter chains (state stays on-chip across a chunk;
+DESIGN.md §4).
+
+Simplifications vs. the reference CUDA implementation (documented):
+single B/C group (G=1), no variance-reduction norm on dt, conv kernel
+of 4.  These do not change the FLOP/byte profile the roofline reads.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, rmsnorm
+from repro.models.partitioning import constrain
+
+CONV_K = 4
+
+
+def ssm_dims(d_model: int, head_dim: int):
+    d_in = 2 * d_model
+    n_heads = d_in // head_dim
+    return d_in, n_heads
+
+
+def mamba2_init(key, d: int, n_state: int, head_dim: int, dtype) -> dict:
+    d_in, h = ssm_dims(d, head_dim)
+    conv_dim = d_in + 2 * n_state
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": normal_init(
+            ks[0], (d, 2 * d_in + 2 * n_state + h), dtype
+        ),
+        "conv_w": normal_init(ks[1], (CONV_K, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": {"scale": jnp.zeros((d_in,), dtype)},
+        "out_proj": normal_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _split_proj(params, x, d: int, n_state: int, head_dim: int):
+    d_in, h = ssm_dims(d, head_dim)
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n_state], axis=-1)
+    return z, xbc, dt, d_in, h
+
+
+def _causal_conv(xbc, params, prev=None):
+    """Depthwise causal conv, kernel CONV_K.  prev: (B, K-1, C) history for
+    decode; None means zero history (training/prefill from scratch)."""
+    b, s, c = xbc.shape
+    if prev is None:
+        prev = jnp.zeros((b, CONV_K - 1, c), xbc.dtype)
+    ext = jnp.concatenate([prev, xbc], axis=1)
+    out = sum(
+        ext[:, i : i + s, :] * params["conv_w"][i]
+        for i in range(CONV_K)
+    )
+    out = jax.nn.silu(out + params["conv_b"])
+    return out, ext[:, -(CONV_K - 1) :, :]
+
+
+def mamba2_apply(
+    params,
+    x: jnp.ndarray,       # (B, S, D)
+    *,
+    n_state: int,
+    head_dim: int,
+    chunk: int = 128,
+):
+    """Training/prefill forward.  Returns (y, final_state, conv_tail)."""
+    b, s, d = x.shape
+    z, xbc, dt, d_in, h = _split_proj(params, x, d, n_state, head_dim)
+    xbc, conv_tail = _causal_conv(xbc, params)
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n_state], axis=-1)
+
+    p = head_dim
+    xs = xs.reshape(b, s, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])                                     # (H,)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xs = constrain(xs.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4),
+                   (None, "batch", None, "model", None))
+    dt_c = constrain(dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3),
+                     (None, "batch", None, "model"))
+    b_c = constrain(
+        bmat.reshape(b, nc, chunk, n_state).transpose(1, 0, 2, 3),
+        (None, "batch", None, None))
+    c_c = constrain(cmat.reshape(b, nc, chunk, n_state).transpose(1, 0, 2, 3),
+                    (None, "batch", None, None))
+
+    def chunk_step(state, inp):
+        xc, dtc, bc, cc = inp                     # (B,L,H,P), (B,L,H), (B,L,N)
+        da = dtc * a                              # (B,L,H)
+        cum = jnp.cumsum(da, axis=1)              # (B,L,H)
+        total = cum[:, -1:, :]                    # (B,1,H)
+
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum(
+            "bln,bhpn,blh->blhp", cc, state, jnp.exp(cum)
+        )
+
+        # intra-chunk: decay-masked quadratic form.  Mask BEFORE the exp:
+        # exp on masked (j > i) entries can overflow and grad(where)
+        # yields inf·0 = NaN in the backward.
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,L,L,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        seg = jnp.where(causal[None, :, :, None], seg, -1e30)
+        decay = jnp.exp(seg)
+        scores = jnp.einsum("bln,bmn->blm", cc, bc)            # (B,L,L)
+        w = scores[..., None] * decay                          # (B,L,L,H)
+        y_intra = jnp.einsum("blmh,bmh,bmhp->blhp", w, dtc, xc)
+
+        # state update
+        rev = jnp.exp(total - cum)                             # (B,L,H)
+        new_state = state * jnp.exp(total)[:, 0, :, None, None] + jnp.einsum(
+            "bln,blh,blhp->bhpn", bc, dtc * rev, xc
+        )
+        y = y_intra + y_inter + params["D"][None, None, :, None] * xc
+        return new_state, y
+
+    state0 = constrain(jnp.zeros((b, h, p, n_state), jnp.float32),
+                       ("batch", "model", None, None))
+    final_state, ys = jax.lax.scan(
+        chunk_step, state0, (xs, dt_c, b_c, c_c)
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"], final_state, conv_tail
+
+
+def mamba2_decode(
+    params,
+    x: jnp.ndarray,        # (B, 1, D)
+    state: jnp.ndarray,    # (B, H, P, N) float32
+    conv_prev: jnp.ndarray,  # (B, K-1, conv_dim)
+    *,
+    n_state: int,
+    head_dim: int,
+):
+    """Single-token step.  Returns (y, new_state, new_conv_prev)."""
+    b, _, d = x.shape
+    z, xbc, dt, d_in, h = _split_proj(params, x, d, n_state, head_dim)
+    xbc, conv_prev = _causal_conv(xbc, params, conv_prev)
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n_state], axis=-1)
+
+    p = head_dim
+    xs = xs.reshape(b, h, p)
+    bv = bmat[:, 0, :]                                         # (B,N)
+    cv = cmat[:, 0, :]
+    dt = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * a)                                       # (B,H)
+
+    state = state * da[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", bv, dt, xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cv, state) + params["D"][None, :, None] * xs
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"], state, conv_prev

@@ -1,0 +1,208 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, chunkwise
+parallel — linear-attention-like) and sLSTM (scalar memory, strictly
+recurrent with head-blocked recurrent gate weights).
+
+mLSTM runs chunkwise like the Mamba2 SSD path: within a chunk the
+decay-masked quadratic form, across chunks a carried (C, n, m) state.
+sLSTM is a lax.scan over time (its recurrence is not parallelizable —
+that is the point of the block).
+
+Simplifications (documented): forget gate via logsigmoid in both cells;
+per-chunk stabilization for mLSTM (exact stabilized recurrence in the
+decode path); mLSTM projection factor 2, sLSTM projection factor 1.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, d: int, n_heads: int, dtype) -> dict:
+    d_in = 2 * d
+    ks = jax.random.split(key, 4)
+    return {
+        "qkv": normal_init(ks[0], (d, 3 * d_in), dtype),
+        "gates": normal_init(ks[1], (d, 2 * n_heads), dtype, scale=0.01),
+        "ogate": normal_init(ks[2], (d, d_in), dtype),
+        "norm": {"scale": jnp.zeros((d_in,), dtype)},
+        "out": normal_init(ks[3], (d_in, d), dtype),
+        "fbias": jnp.full((n_heads,), 3.0, jnp.float32),  # open forget gates
+    }
+
+
+def _mlstm_proj(params, x, n_heads):
+    b, s, d = x.shape
+    d_in = 2 * d
+    p = d_in // n_heads
+    q, k, v = jnp.split(x @ params["qkv"], 3, axis=-1)
+    q = q.reshape(b, s, n_heads, p)
+    k = k.reshape(b, s, n_heads, p) / math.sqrt(p)
+    v = v.reshape(b, s, n_heads, p)
+    gates = (x @ params["gates"]).astype(jnp.float32)
+    li, lf = jnp.split(gates, 2, axis=-1)                  # (B,S,H) each
+    lf = jax.nn.log_sigmoid(lf + params["fbias"])
+    o = jax.nn.sigmoid(x @ params["ogate"])
+    return q, k, v, li, lf, o, p
+
+
+def mlstm_apply(params, x, *, n_heads: int, chunk: int = 128):
+    """(B,S,D) -> (B,S,D); returns (y, (C, n, m) final state)."""
+    b, s, d = x.shape
+    q, k, v, li, lf, o, p = _mlstm_proj(params, x, n_heads)
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def to_chunks(t):
+        return t.reshape((b, nc, chunk) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1))
+        )
+
+    qc, kc, vc, lic, lfc = map(to_chunks, (q, k, v, li, lf))
+
+    def step(state, inp):
+        c_st, n_st, m_st = state              # (B,H,P,P), (B,H,P), (B,H)
+        qt, kt, vt, lit, lft = inp
+        cum = jnp.cumsum(lft, axis=1)                        # (B,L,H)
+        total = cum[:, -1, :]                                # (B,H)
+
+        # log source strength of token j, measured at the chunk origin:
+        #   a_j = li_j - cum_j  (weight of j at i is exp(cum_i + a_j))
+        a = lit - cum                                        # (B,L,H)
+        amax = jax.lax.cummax(a, axis=1)                     # max_{j<=i} a_j
+        # stabilizer at i: m_i = cum_i + max(m_st, max_{j<=i} a_j)
+        m_new = cum + jnp.maximum(m_st[:, None, :], amax)    # (B,L,H)
+
+        # inter: decayed carry-in (stored state carries scale e^{-m_st})
+        inter_w = jnp.exp(m_st[:, None, :] + cum - m_new)    # (B,L,H)
+        num_inter = jnp.einsum("blhp,bhqp,blh->blhq", qt, c_st, inter_w)
+        den_inter = jnp.einsum("blhp,bhp,blh->blh", qt, n_st, inter_w)
+
+        # intra: w_ij = exp(cum_i - cum_j + li_j - m_i), j <= i.
+        # mask before exp (masked-exp grads are inf·0 = NaN otherwise)
+        logw = (cum - m_new)[:, :, None, :] + a[:, None, :, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logw = jnp.where(causal[None, :, :, None], logw, -1e30)
+        w = jnp.exp(logw)
+        scores = jnp.einsum("blhp,bmhp->blmh", qt, kt)
+        sw = scores * w
+        num = num_inter + jnp.einsum("blmh,bmhp->blhp", sw, vt)
+        # denominator: q·n = Σ_j w_ij (q·k_j) = Σ_j sw_ij
+        den = den_inter + jnp.sum(sw, axis=2)
+
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+
+        # state update (stabilized at the chunk-end max)
+        m_out = total + jnp.maximum(m_st, amax[:, -1, :])    # (B,H)
+        carry_w = jnp.exp(m_st + total - m_out)              # (B,H)
+        in_w = jnp.exp(total[:, None, :] + a - m_out[:, None, :])  # (B,L,H)
+        c_new = c_st * carry_w[..., None, None] + jnp.einsum(
+            "bmhp,bmhq,bmh->bhpq", vt, kt, in_w
+        )
+        n_new = n_st * carry_w[..., None] + jnp.einsum(
+            "bmhp,bmh->bhp", kt, in_w
+        )
+        return (c_new, n_new, m_out), h
+
+    p_dim = p
+    state0 = (
+        jnp.zeros((b, n_heads, p_dim, p_dim), jnp.float32),
+        jnp.zeros((b, n_heads, p_dim), jnp.float32),
+        jnp.full((b, n_heads), -1e30, jnp.float32),
+    )
+    state, hs = jax.lax.scan(step, state0, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, 2 * d)
+    y = rmsnorm(params["norm"], h.astype(x.dtype) * o)
+    return y @ params["out"], state
+
+
+def mlstm_decode(params, x, state, *, n_heads: int):
+    """Single token.  x: (B,1,D); state (C,n,m)."""
+    b, _, d = x.shape
+    q, k, v, li, lf, o, p = _mlstm_proj(params, x, n_heads)
+    qt, kt, vt = q[:, 0], k[:, 0], v[:, 0]                # (B,H,P)
+    lit, lft = li[:, 0], lf[:, 0]                         # (B,H)
+    c_st, n_st, m_st = state
+
+    m_new = jnp.maximum(lft + m_st, lit)
+    fw = jnp.exp(lft + m_st - m_new)
+    iw = jnp.exp(lit - m_new)
+    c_new = c_st * fw[..., None, None] + jnp.einsum("bhp,bhq->bhpq", vt, kt) \
+        * iw[..., None, None]
+    n_new = n_st * fw[..., None] + kt * iw[..., None]
+    num = jnp.einsum("bhp,bhqp->bhq", qt, c_new)
+    den = jnp.einsum("bhp,bhp->bh", qt, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(b, 1, 2 * d)
+    y = rmsnorm(params["norm"], h.astype(x.dtype) * o)
+    return y @ params["out"], (c_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, d: int, n_heads: int, dtype) -> dict:
+    p = d // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": normal_init(ks[0], (d, 4 * d), dtype),
+        "r": normal_init(ks[1], (n_heads, p, 4 * p), dtype),
+        "fbias": jnp.full((d,), 3.0, jnp.float32),
+        "norm": {"scale": jnp.zeros((d,), dtype)},
+        "out": normal_init(ks[2], (d, d), dtype),
+    }
+
+
+def _slstm_cell(params, xg, state, n_heads, d):
+    """xg: (B, 4d) pre-activations from x; state = (c, n, h, m)."""
+    p = d // n_heads
+    c, n, h, m = state
+    hh = h.reshape(-1, n_heads, p)
+    rg = jnp.einsum("bhp,hpq->bhq", hh, params["r"]).reshape(-1, 4 * d)
+    zi, zf, zz, zo = jnp.split((xg + rg).astype(jnp.float32), 4, axis=-1)
+    lf = jax.nn.log_sigmoid(zf + params["fbias"])
+    m_new = jnp.maximum(lf + m, zi)
+    i = jnp.exp(zi - m_new)
+    f = jnp.exp(lf + m - m_new)
+    z = jnp.tanh(zz)
+    o = jax.nn.sigmoid(zo)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_apply(params, x, *, n_heads: int):
+    """(B,S,D) -> (B,S,D); sequential scan over time."""
+    b, s, d = x.shape
+    xg = (x @ params["wx"]).astype(jnp.float32)          # (B,S,4d)
+    state0 = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) + (
+        jnp.full((b, d), -1e30, jnp.float32),
+    )
+
+    def step(state, xt):
+        return _slstm_cell(params, xt, state, n_heads, d)
+
+    state, hs = jax.lax.scan(step, state0, xg.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = rmsnorm(params["norm"], h)
+    return y @ params["out"], state
+
+
+def slstm_decode(params, x, state, *, n_heads: int):
+    b, _, d = x.shape
+    xg = (x[:, 0] @ params["wx"]).astype(jnp.float32)
+    state, h = _slstm_cell(params, xg, state, n_heads, d)
+    y = rmsnorm(params["norm"], h[:, None, :].astype(x.dtype))
+    return y @ params["out"], state

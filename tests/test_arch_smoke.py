@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config
+of the same family, one forward/train step on CPU, output shapes +
+finiteness asserted.  Also decode-vs-forward consistency where the arch
+admits it."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_reduced
+from repro.configs.shapes import SHAPES, cells_for
+from repro.models import decode as DEC
+from repro.models import model as MDL
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    labels = jnp.roll(tok, -1, axis=1)
+    batch = {"tokens": tok, "labels": labels}
+    kw = {}
+    if cfg.frontend == "vision":
+        emb = jnp.asarray(rng.standard_normal((B, S, cfg.d_model),
+                                              dtype=np.float32))
+        batch = {"embeds": emb, "labels": labels}
+        kw["embeds"] = emb
+    if cfg.is_enc_dec:
+        ee = jnp.asarray(rng.standard_normal((B, S, cfg.d_model),
+                                             dtype=np.float32))
+        batch["enc_embeds"] = ee
+        kw["enc_embeds"] = ee
+    return batch, kw
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_loss(arch, rng):
+    cfg = get_reduced(arch)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0))
+    batch, _ = _batch(cfg, rng)
+    loss, metrics = jax.jit(
+        lambda p, b: MDL.loss_fn(p, cfg, b, q_chunk=16))(params, batch)
+    assert np.isfinite(float(loss))
+    # near ln(V) at init: sane logit scale
+    assert float(loss) < np.log(cfg.vocab_size) + 3.0
+
+    logits, aux = jax.jit(
+        lambda p, b: MDL.forward(p, cfg, b.get("tokens"),
+                                 embeds=b.get("embeds"),
+                                 enc_embeds=b.get("enc_embeds"),
+                                 q_chunk=16))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step_descends(arch, rng):
+    from repro.optim import adamw
+    from repro.train.steps import build_train_step
+
+    cfg = get_reduced(arch)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(1))
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=1, total_steps=10)
+    opt = adamw.init_state(opt_cfg, params)
+    step = jax.jit(build_train_step(cfg, opt_cfg, q_chunk=16))
+    batch, _ = _batch(cfg, rng)
+    losses = []
+    for _ in range(4):
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(v) for v in losses)
+    assert losses[-1] < losses[0]     # same-batch loss must descend
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch, rng):
+    cfg = get_reduced(arch)
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0))
+    batch, kw = _batch(cfg, rng)
+    tk = batch.get("tokens")
+    logits, cache = jax.jit(
+        lambda p: DEC.prefill(p, cfg, tk, smax=S + 4, q_chunk=16, **kw)
+    )(params)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = jax.jit(
+        lambda p, c, t: DEC.decode_step(p, cfg, c, t))(params, cache, nxt)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2)).all()
+    assert int(cache["pos"]) == S + 1
+
+    if cfg.frontend is None and not cfg.is_enc_dec:
+        full = jnp.concatenate([tk, nxt], 1)
+        fwd, _ = jax.jit(
+            lambda p, t: MDL.forward(p, cfg, t, q_chunk=16))(params, full)
+        a, b = np.asarray(fwd[:, -1]), np.asarray(logits2[:, 0])
+        rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+        assert rel < 2e-3, f"decode/fwd mismatch {rel}"
+
+
+def test_exact_assigned_configs():
+    """The full configs carry the exact assigned hyperparameters."""
+    expect = {
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, ff, v), arch
+
+
+def test_moe_configs():
+    ds = get_config("deepseek-moe-16b").moe
+    assert (ds.n_experts, ds.top_k, ds.n_shared) == (64, 6, 2)
+    ar = get_config("arctic-480b").moe
+    assert (ar.n_experts, ar.top_k) == (128, 2)
+    assert ar.dense_residual_ff == 4864
+
+
+def test_param_counts_plausible():
+    """Total parameter counts land near the models' nameplates."""
+    approx = {"gemma-7b": 8.5e9, "gemma-2b": 2.5e9, "qwen2.5-32b": 32e9,
+              "arctic-480b": 480e9, "deepseek-moe-16b": 16e9,
+              "chameleon-34b": 34e9, "xlstm-350m": 0.35e9}
+    for arch, n in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.55 * n < got < 1.75 * n, f"{arch}: {got/1e9:.2f}B vs {n/1e9}B"
+
+
+def test_shape_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        cells = cells_for(cfg)
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(cells)
+        if arch in ("zamba2-7b", "xlstm-350m", "gemma3-27b"):
+            assert "long_500k" in cells
+        if arch in ("gemma-7b", "qwen2.5-32b", "chameleon-34b"):
+            assert "long_500k" not in cells

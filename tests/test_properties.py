@@ -1,0 +1,107 @@
+"""Hypothesis property tests on the system's morphological invariants
+(paper §2 algebra)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.baselines import vhgw
+from repro.core import morphology as M
+from repro.core import operators as OPS
+
+imgs = arrays(np.uint8, st.tuples(st.integers(4, 24), st.integers(4, 24)),
+              elements=st.integers(0, 255))
+small = st.integers(0, 4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(imgs)
+def test_duality(f):
+    """ε(f) = 255 - δ(255 - f) on the inverted u8 lattice."""
+    fj = jnp.asarray(f)
+    lhs = M.erode3(fj)
+    rhs = 255 - M.dilate3(255 - fj)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@settings(max_examples=25, deadline=None)
+@given(imgs)
+def test_decomposition(f):
+    """Eq. 23: separable 1-D passes equal the direct 3×3 filter."""
+    fj = jnp.asarray(f)
+    np.testing.assert_array_equal(
+        np.asarray(M.erode3(fj)), np.asarray(M.erode3_direct(fj)))
+    np.testing.assert_array_equal(
+        np.asarray(M.dilate3(fj)), np.asarray(M.dilate3_direct(fj)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(imgs, small, small)
+def test_chain_composition(f, s, t):
+    """ε_s ∘ ε_t = ε_{s+t} (the chain identity the kernels exploit)."""
+    fj = jnp.asarray(f)
+    np.testing.assert_array_equal(
+        np.asarray(M.erode(M.erode(fj, s), t)),
+        np.asarray(M.erode(fj, s + t)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(imgs, st.integers(1, 5))
+def test_vhgw_equals_chain(f, s):
+    """O(1)/px erosion equals the chained elementary erosion."""
+    fj = jnp.asarray(f)
+    np.testing.assert_array_equal(
+        np.asarray(vhgw.erode(fj, s)), np.asarray(M.erode(fj, s)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(imgs)
+def test_extensivity_antiextensivity(f):
+    fj = jnp.asarray(f)
+    assert bool(jnp.all(M.erode3(fj) <= fj))
+    assert bool(jnp.all(M.dilate3(fj) >= fj))
+    assert bool(jnp.all(M.opening(fj, 2) <= fj))
+    assert bool(jnp.all(M.closing(fj, 2) >= fj))
+
+
+@settings(max_examples=15, deadline=None)
+@given(imgs, st.integers(0, 2**31 - 1))
+def test_reconstruction_fixpoint_and_bounds(f, seed):
+    """ε_rec result lies in [mask, marker] and is a fixpoint of ε₁ᵐ."""
+    m = np.random.default_rng(seed).integers(
+        0, 256, f.shape).astype(np.uint8)
+    marker = jnp.maximum(jnp.asarray(f), jnp.asarray(m))
+    mask = jnp.asarray(m)
+    rec = M.erode_reconstruct(marker, mask)
+    assert bool(jnp.all(rec >= mask))
+    assert bool(jnp.all(rec <= marker))
+    again = M.geodesic_erode1(rec, mask)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(rec))
+
+
+@settings(max_examples=15, deadline=None)
+@given(imgs, st.integers(1, 60))
+def test_hmax_properties(f, h):
+    fj = jnp.asarray(f)
+    out = OPS.hmax(fj, h)
+    assert bool(jnp.all(out <= fj))
+    # dome is what was removed
+    np.testing.assert_array_equal(
+        np.asarray(OPS.dome(fj, h)), np.asarray(fj - out))
+
+
+@settings(max_examples=10, deadline=None)
+@given(imgs)
+def test_granulometry_monotone(f):
+    """G_s is non-increasing in s (sieving axiom) ⇒ PS ≥ 0."""
+    ps = np.asarray(OPS.pattern_spectrum(jnp.asarray(f), 4))
+    assert (ps >= -1e-6).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(imgs)
+def test_qdt_is_lipschitz(f):
+    d = np.asarray(OPS.qdt(jnp.asarray(f)))
+    dx = np.abs(np.diff(d, axis=0)).max(initial=0)
+    dy = np.abs(np.diff(d, axis=1)).max(initial=0)
+    assert max(dx, dy) <= 1
