@@ -68,6 +68,36 @@ def run(quick: bool = True):
 
     bench("QDT", lambda: K.qdt_planes(f, backend="xla"))
 
+    # sparse-marker reconstruction: exercises the active-band requeue
+    # scheduler.  The mask is one horizontally extended object on a zero
+    # background, so the reconstruction stays confined to a few bands —
+    # everything else converges after the first chunk and is skipped
+    # (and the driver compacts the survivors into a dense grid).
+    sparse_mask = np.zeros((size, size), np.uint8)
+    lo, hi = (3 * size) // 8, (4 * size) // 8
+    sparse_mask[lo:hi, size // 16 : size - size // 16] = 200
+    sparse = np.zeros((size, size), np.uint8)
+    sparse[(lo + hi) // 2, size // 8] = 200
+    sj, smj = jnp.asarray(sparse), jnp.asarray(sparse_mask)
+    _, stats = jax.block_until_ready(
+        K.reconstruct_with_stats(sj, smj, "dilate", "pallas"))
+    frac = (int(stats.active_band_sum)
+            / max(1, int(stats.total_bands) * int(stats.chunks)))
+    bench("RECON_SPARSE_pallas",
+          lambda: K.reconstruct(sj, smj, "dilate", "pallas"))
+    rows[-1]["derived"] += (f" chunks={int(stats.chunks)}"
+                            f" active_frac={frac:.2f}")
+
+    # batched front-end: one (N, H, W) stack through the fused kernels
+    n_batch = 4
+    fb = jnp.asarray(np.stack([male] * n_batch))
+    bench(f"BATCH_ERODE_N{n_batch}_s8",
+          lambda: K.erode(fb, 8, backend="pallas"))
+    mb = jnp.asarray(np.stack([sparse] * n_batch))
+    maskb = jnp.asarray(np.stack([sparse_mask] * n_batch))
+    bench(f"BATCH_RECON_N{n_batch}",
+          lambda: K.reconstruct(mb, maskb, "dilate", "pallas"))
+
     smax = 11
     bench(f"PS_0_{smax}",
           lambda: jax.jit(lambda x: OPS.pattern_spectrum(x, smax))(f),

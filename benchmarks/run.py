@@ -1,8 +1,13 @@
 """Benchmark runner — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only chain,dims]
+                                            [--json OUTDIR]
 
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+With ``--json OUTDIR`` additionally writes one ``BENCH_<module>.json``
+per module mapping row name → us_per_call, so the perf trajectory is
+machine-readable across PRs.
+
 Modules:
   chain      paper Fig. 7/8 + Table 4 (chain length × dtype, speedups,
              throughput)
@@ -14,6 +19,8 @@ Modules:
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 
 from benchmarks import (bench_chain, bench_crossover, bench_dims,
                         bench_operators, bench_roofline, bench_table3)
@@ -35,12 +42,25 @@ def main() -> None:
                     help="paper-scale sizes (1024², long chains)")
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
+    ap.add_argument("--json", default=None, metavar="OUTDIR",
+                    help="write BENCH_<module>.json files (name -> "
+                         "us_per_call) into OUTDIR")
     args = ap.parse_args()
 
     names = args.only.split(",") if args.only else list(MODULES)
+    outdir = None
+    if args.json is not None:
+        outdir = pathlib.Path(args.json)
+        outdir.mkdir(parents=True, exist_ok=True)
+
     print("name,us_per_call,derived")
     for name in names:
-        emit(MODULES[name].run(quick=not args.full))
+        rows = MODULES[name].run(quick=not args.full)
+        emit(rows)
+        if outdir is not None:
+            payload = {r["name"]: r["us_per_call"] for r in rows}
+            path = outdir / f"BENCH_{name}.json"
+            path.write_text(json.dumps(payload, indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

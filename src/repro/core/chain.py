@@ -13,6 +13,27 @@ Bandwidth model (per K-chunk, per band of TH rows, width W, dtype b):
     vs. unfused   = K · 2·TH·W·b                            (K round trips)
     amplification ≈ 2K·TH / (2TH + 2K)  → K for TH >> K
 Redundant compute fraction = 2K / (TH + 2K).
+
+Convergence-driven chains (reconstruction, QDT — the paper's Alg. 4/5
+requeue mechanism) additionally carry a *scheduling policy*: once the
+geodesic wavefront localizes, only bands that changed in the previous
+chunk — or whose vertical neighbours changed — need to be requeued.  The
+policy fields below control that scheduler:
+
+``requeue_halo``
+    how many neighbouring bands to re-activate around a changed band.
+    1 is exact for ``fuse_k <= band_h`` (influence propagates at most
+    ``fuse_k`` rows per chunk, which cannot cross a full band).
+``compact_threshold``
+    when the active fraction drops below this, the driver gathers the
+    active bands into a dense workspace and launches a smaller grid
+    (the TPU analogue of the paper's work queue).  0 disables
+    compaction.
+
+For convergent plans the planner also *shrinks* the band height toward
+``CONVERGENT_TARGET_BANDS`` bands per image: band-level requeueing is
+only as fine-grained as the band, so a VMEM-maximal band (often the
+whole image) would leave nothing to skip.
 """
 from __future__ import annotations
 
@@ -30,17 +51,55 @@ LANES = 128
 #: Sublane multiples per dtype (f32: 8, bf16: 16, int8: 32).
 SUBLANES = {4: 8, 2: 16, 1: 32, 8: 8}
 
+#: Bands per image the planner aims for on convergence-driven chains.
+CONVERGENT_TARGET_BANDS = 16
+
 
 @dataclasses.dataclass(frozen=True)
 class ChainPlan:
-    """A schedule for a chain of S elementary filters."""
+    """A schedule for a chain of S elementary filters.
+
+    The plan covers a stack of ``n_images`` same-shaped images laid out
+    vertically (batched drivers stack ``(N, H_pad, W_pad)`` into
+    ``(N·H_pad, W_pad)``); ``n_bands`` is *per image*.
+    """
 
     band_h: int          # TH: rows of useful output per grid step
     fuse_k: int          # K: elementary filters fused per kernel launch
     width_pad: int       # W rounded up to a lane multiple
-    height_pad: int      # H rounded up to a band multiple
-    n_bands: int
+    height_pad: int      # H rounded up to a band multiple (per image)
+    n_bands: int         # bands per image
     n_chunks: int        # ceil(S / K) kernel launches for a fixed chain
+    n_images: int = 1    # images stacked vertically in the working array
+    requeue_halo: int = 1        # bands re-activated around a changed band
+    compact_threshold: float = 0.0   # active fraction below which to compact
+
+    def __post_init__(self):
+        # The one place the band/fuse contract is validated (the kernels
+        # assert it too, but every driver goes through a ChainPlan).
+        if self.band_h % self.fuse_k:
+            raise ValueError(
+                f"band_h={self.band_h} must be a multiple of fuse_k={self.fuse_k}"
+            )
+        if self.height_pad % self.band_h:
+            raise ValueError(
+                f"height_pad={self.height_pad} must be a multiple of "
+                f"band_h={self.band_h}"
+            )
+        if self.requeue_halo < 1:
+            raise ValueError("requeue_halo must be >= 1 (neighbour influence)")
+        if not 0.0 <= self.compact_threshold <= 1.0:
+            raise ValueError("compact_threshold must be in [0, 1]")
+
+    @property
+    def total_bands(self) -> int:
+        """Grid size for the stacked (n_images · height_pad) working array."""
+        return self.n_bands * self.n_images
+
+    @property
+    def compact_capacity(self) -> int:
+        """Static workspace size (bands) for the compacted grid."""
+        return max(1, math.ceil(self.compact_threshold * self.total_bands))
 
     @property
     def redundant_compute_fraction(self) -> float:
@@ -62,11 +121,22 @@ def plan_chain(
     n_images_resident: int = 1,
     fuse_k: int | None = None,
     band_h: int | None = None,
+    n_images: int = 1,
+    convergent: bool = False,
+    requeue_halo: int = 1,
+    compact_threshold: float | None = None,
 ) -> ChainPlan:
     """Choose (TH, K) so the working set fits VMEM.
 
     ``n_images_resident`` counts extra same-shaped operands the kernel
-    holds (e.g. the geodesic mask, QDT's r/d planes).
+    holds (e.g. the geodesic mask, QDT's r/d planes).  ``n_images`` is
+    the batch size of the vertical image stack the plan will drive.
+
+    ``convergent=True`` marks a convergence-driven chain (reconstruction
+    / QDT): the planner caps the band height near
+    ``CONVERGENT_TARGET_BANDS`` bands per image so the active-band
+    requeue scheduler has skipping granularity, and enables compaction
+    (``compact_threshold=0.5``) unless overridden.
     """
     b = jnp.dtype(dtype).itemsize
     w_pad = max(LANES, math.ceil(width / LANES) * LANES)
@@ -85,10 +155,21 @@ def plan_chain(
         band_h = max(fuse_k, (vmem_budget - 2 * fuse_k * per_row) // per_row)
         band_h = max(fuse_k, (band_h // fuse_k) * fuse_k)  # TH % K == 0
         band_h = min(band_h, 512)
-    if band_h % fuse_k:
-        raise ValueError(f"band_h={band_h} must be a multiple of fuse_k={fuse_k}")
+        if convergent:
+            # requeue granularity: aim for ~CONVERGENT_TARGET_BANDS bands
+            target = math.ceil(height / CONVERGENT_TARGET_BANDS)
+            target = max(fuse_k, math.ceil(target / fuse_k) * fuse_k)
+            band_h = min(band_h, target)
+
+    if compact_threshold is None:
+        compact_threshold = 0.5 if convergent else 0.0
 
     h_pad = math.ceil(height / band_h) * band_h
     n_bands = h_pad // band_h
     n_chunks = math.ceil((chain_len or fuse_k) / fuse_k)
-    return ChainPlan(band_h, fuse_k, w_pad, h_pad, n_bands, n_chunks)
+    return ChainPlan(
+        band_h, fuse_k, w_pad, h_pad, n_bands, n_chunks,
+        n_images=n_images,
+        requeue_halo=requeue_halo,
+        compact_threshold=compact_threshold,
+    )

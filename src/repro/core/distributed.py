@@ -32,8 +32,14 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax >= 0.4.35 exposes shard_map at the top level
     shard_map = jax.shard_map
+    SHMAP_KW = {}
 except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
+
+    # the experimental shard_map has no replication rule for while_loop;
+    # disable the (purely diagnostic) replication check.  SHMAP_KW is
+    # the single home for this shim — splat it into every shard_map call.
+    SHMAP_KW = {"check_rep": False}
 
 from repro.core import morphology as M
 from repro.core.chain import plan_chain
@@ -48,7 +54,8 @@ from repro.kernels.common import ident_for
 def _exchange_axis(local, k: int, axis_name, fill, axis: int):
     """Attach a k-deep halo along ``axis`` from mesh neighbours on
     ``axis_name`` (global edges are filled with the absorbing value)."""
-    n = jax.lax.axis_size(axis_name)
+    # psum of 1 == axis size; jax.lax.axis_size only exists in newer jax
+    n = jax.lax.psum(1, axis_name)
     if n == 1:
         pad = [(0, 0)] * local.ndim
         pad[axis] = (k, k)
@@ -133,7 +140,8 @@ def distributed_chain(
             f_loc = _crop(ext, rem, bool(col_axes_t))
         return f_loc
 
-    sharded = shard_map(local_fn, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    sharded = shard_map(local_fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                        **SHMAP_KW)
     return jax.jit(sharded)
 
 
@@ -175,9 +183,13 @@ def distributed_reconstruct(
         m_ext = exchange_halo(m_loc, k, row_axes_t, col_axes_t, fill)
         limit = max_chunks
         if limit is None:
-            h = f_loc.shape[0] * jax.lax.axis_size(row_axes_t[0])
-            w = f_loc.shape[1]
-            limit = (h + w) // k + 2
+            # pixel-count bound, like kernels.ops.reconstruct: geodesic
+            # paths under a serpentine mask can exceed the H+W diameter
+            h = f_loc.shape[0] * jax.lax.psum(1, row_axes_t[0])
+            w = f_loc.shape[1] * (
+                jax.lax.psum(1, col_axes_t[0]) if col_axes_t else 1
+            )
+            limit = (h * w) // k + 2
 
         def cond(state):
             _, changed, it = state
@@ -198,6 +210,6 @@ def distributed_reconstruct(
         return out
 
     sharded = shard_map(
-        local_fn, mesh=mesh, in_specs=(spec, spec), out_specs=spec
+        local_fn, mesh=mesh, in_specs=(spec, spec), out_specs=spec, **SHMAP_KW
     )
     return jax.jit(sharded)

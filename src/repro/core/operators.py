@@ -3,6 +3,12 @@
 Every operator here is pure jnp/lax — it jits, shards (via the wrappers
 in core.distributed) and serves as the oracle for the Pallas-kernel
 fast path in repro.kernels.
+
+The reconstruction-based operators additionally accept
+``backend="pallas"`` to route their inner reconstruct through the fused
+kernel fast path (with active-band requeue scheduling); the default
+``"xla"`` keeps them pure-jnp oracles.  All of them accept batched
+(..., H, W) input — the markers use per-image reductions.
 """
 from __future__ import annotations
 
@@ -10,6 +16,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import morphology as M
+
+
+def _reconstruct(marker, mask, op, max_iters, backend):
+    """Dispatch reconstruction to the jnp oracle or the Pallas fast path.
+
+    An explicit ``max_iters`` counts *elementary* steps — the fused
+    driver can only truncate at K-chunk granularity, so truncated
+    reconstructions always run the exact jnp path regardless of
+    ``backend``.
+    """
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"backend must be 'xla' or 'pallas', got {backend!r}")
+    if backend == "pallas" and max_iters is None:
+        from repro.kernels import ops as K  # lazy: kernels import this module
+
+        return K.reconstruct(marker, mask, op, "pallas")
+    if op == "erode":
+        return M.erode_reconstruct(marker, mask, max_iters)
+    return M.dilate_reconstruct(marker, mask, max_iters)
 
 # ---------------------------------------------------------------------------
 # saturating arithmetic (the paper evaluates on unsigned char images)
@@ -39,14 +64,18 @@ def sat_add(f: jnp.ndarray, h) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def hmax(f: jnp.ndarray, h, max_iters: int | None = None) -> jnp.ndarray:
+def hmax(
+    f: jnp.ndarray, h, max_iters: int | None = None, backend: str = "xla"
+) -> jnp.ndarray:
     """HMAX_h(f) = δ_rec^f(f - h): suppress maxima of contrast < h."""
-    return M.dilate_reconstruct(sat_sub(f, h), f, max_iters)
+    return _reconstruct(sat_sub(f, h), f, "dilate", max_iters, backend)
 
 
-def dome(f: jnp.ndarray, h, max_iters: int | None = None) -> jnp.ndarray:
+def dome(
+    f: jnp.ndarray, h, max_iters: int | None = None, backend: str = "xla"
+) -> jnp.ndarray:
     """DOME_h(f) = f - HMAX_h(f): extract the suppressed maxima."""
-    return f - hmax(f, h, max_iters)
+    return f - hmax(f, h, max_iters, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -67,23 +96,29 @@ def _border_mask(shape) -> jnp.ndarray:
 
 
 def hfill_marker(f: jnp.ndarray) -> jnp.ndarray:
-    """m_HFILL (Eq. 9): border pixels keep f, interior = global max."""
-    return jnp.where(_border_mask(f.shape), f, jnp.max(f))
+    """m_HFILL (Eq. 9): border pixels keep f, interior = per-image max."""
+    hi = jnp.max(f, axis=(-2, -1), keepdims=True)
+    return jnp.where(_border_mask(f.shape), f, hi)
 
 
-def hfill(f: jnp.ndarray, max_iters: int | None = None) -> jnp.ndarray:
+def hfill(
+    f: jnp.ndarray, max_iters: int | None = None, backend: str = "xla"
+) -> jnp.ndarray:
     """HFILL(f) = ε_rec^f(m_HFILL(f)) (Eq. 8)."""
-    return M.erode_reconstruct(hfill_marker(f), f, max_iters)
+    return _reconstruct(hfill_marker(f), f, "erode", max_iters, backend)
 
 
 def raobj_marker(f: jnp.ndarray) -> jnp.ndarray:
-    """m_RAOBJ (Eq. 11): border pixels keep f, interior = global min."""
-    return jnp.where(_border_mask(f.shape), f, jnp.min(f))
+    """m_RAOBJ (Eq. 11): border pixels keep f, interior = per-image min."""
+    lo = jnp.min(f, axis=(-2, -1), keepdims=True)
+    return jnp.where(_border_mask(f.shape), f, lo)
 
 
-def raobj(f: jnp.ndarray, max_iters: int | None = None) -> jnp.ndarray:
+def raobj(
+    f: jnp.ndarray, max_iters: int | None = None, backend: str = "xla"
+) -> jnp.ndarray:
     """RAOBJ(f) = f - δ_rec^f(m_RAOBJ(f)) (Eq. 10)."""
-    return f - M.dilate_reconstruct(raobj_marker(f), f, max_iters)
+    return f - _reconstruct(raobj_marker(f), f, "dilate", max_iters, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -92,10 +127,10 @@ def raobj(f: jnp.ndarray, max_iters: int | None = None) -> jnp.ndarray:
 
 
 def opening_by_reconstruction(
-    f: jnp.ndarray, s: int, max_iters: int | None = None
+    f: jnp.ndarray, s: int, max_iters: int | None = None, backend: str = "xla"
 ) -> jnp.ndarray:
     """γ_rec^s(f) = δ_rec^f(ε_s(f)): remove components smaller than s."""
-    return M.dilate_reconstruct(M.erode(f, s), f, max_iters)
+    return _reconstruct(M.erode(f, s), f, "dilate", max_iters, backend)
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,18 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+def image_edges(i, bands_per_image: int):
+    """(at_top, at_bot) for grid step ``i`` of a vertically stacked batch.
+
+    The drivers lay N images out as one (N·H_pad, W) array; band
+    ``i`` is the ``i % bands_per_image``-th band of its image, and halo
+    pinning must happen at *image* edges (not stack edges) so values
+    never propagate between images.
+    """
+    j = i % bands_per_image
+    return j == 0, j == bands_per_image - 1
+
+
 def ident_for(op: str, dtype):
     """Lattice identity: +max for erosion (min-op), -max for dilation."""
     dtype = jnp.dtype(dtype)

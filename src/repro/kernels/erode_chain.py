@@ -32,16 +32,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import elementary_3x3, ident_for
+from repro.kernels.common import elementary_3x3, ident_for, image_edges
 
 
-def _chain_kernel(x_top, x_mid, x_bot, out, *, op: str, fuse_k: int, band_h: int):
-    i = pl.program_id(0)
-    n = pl.num_programs(0)
+def _chain_kernel(x_top, x_mid, x_bot, out, *, op: str, fuse_k: int,
+                  band_h: int, bands_per_image: int):
     ident = ident_for(op, x_mid.dtype)
 
-    top = jnp.where(i > 0, x_top[...], ident)
-    bot = jnp.where(i < n - 1, x_bot[...], ident)
+    at_top, at_bot = image_edges(pl.program_id(0), bands_per_image)
+    top = jnp.where(at_top, ident, x_top[...])
+    bot = jnp.where(at_bot, ident, x_bot[...])
     stack = jnp.concatenate([top, x_mid[...], bot], axis=0)
 
     for _ in range(fuse_k):
@@ -57,18 +57,25 @@ def chain_step(
     fuse_k: int,
     band_h: int,
     interpret: bool = True,
+    bands_per_image: int | None = None,
 ) -> jnp.ndarray:
-    """Apply K fused elementary filters to a pre-padded image.
+    """Apply K fused elementary filters to a pre-padded image (stack).
 
     ``x``: (H_pad, W_pad) with H_pad % band_h == 0, band_h % fuse_k == 0,
-    padding filled with the lattice identity for ``op``.
+    padding filled with the lattice identity for ``op``.  For a vertical
+    stack of N images pass ``bands_per_image`` so the halo is pinned at
+    each image's edges rather than only the stack's.
     """
     h, w = x.shape
     assert h % band_h == 0 and band_h % fuse_k == 0, (h, band_h, fuse_k)
     n_bands = h // band_h
+    if bands_per_image is None:
+        bands_per_image = n_bands
+    assert n_bands % bands_per_image == 0
     r = band_h // fuse_k  # halo blocks (K rows) per band
 
-    kern = functools.partial(_chain_kernel, op=op, fuse_k=fuse_k, band_h=band_h)
+    kern = functools.partial(_chain_kernel, op=op, fuse_k=fuse_k,
+                             band_h=band_h, bands_per_image=bands_per_image)
     last_k_block = h // fuse_k - 1
 
     return pl.pallas_call(

@@ -19,6 +19,19 @@ the chunk.  Because the geodesic sequence is pointwise monotone, "no
 centre pixel anywhere changed across K steps" ⇔ global fixpoint of ε₁ᵐ
 (DESIGN.md §3) — this is the kernel-level version of the paper's
 ``converged`` flag + requeue mechanism.
+
+Requeue scheduling (this file's side of it): each band carries an
+``active`` scalar.  When 0, the kernel early-outs under ``pl.when`` and
+writes the input band through unchanged with a zero flag — the skipped
+band costs one VMEM copy instead of K elementary filters.  The driver
+(kernels.ops) maintains the activity vector: a band is requeued iff it
+or a vertical neighbour changed in the previous chunk, which is exact
+because influence propagates at most ``fuse_k <= band_h`` rows per
+chunk.
+
+Batching: the driver stacks N images vertically into one
+(N·H_pad, W) array; ``bands_per_image`` makes the halo pinning happen
+at *image* edges so nothing leaks between stacked images.
 """
 from __future__ import annotations
 
@@ -28,34 +41,52 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import elementary_3x3, ident_for
+from repro.kernels.common import elementary_3x3, ident_for, image_edges
 
 
 def _geodesic_kernel(
-    f_top, f_mid, f_bot, m_top, m_mid, m_bot, out, changed,
-    *, op: str, fuse_k: int, band_h: int,
+    active, f_top, f_mid, f_bot, m_top, m_mid, m_bot, out, changed,
+    *, op: str, fuse_k: int, band_h: int, bands_per_image: int,
+    pin_halos: bool,
 ):
-    i = pl.program_id(0)
-    n = pl.num_programs(0)
-    # Pin the out-of-image halo: marker ← identity, mask ← identity, so the
-    # pad region is absorbing and transmits nothing.
-    ident = ident_for(op, f_mid.dtype)
+    # program_id must be read outside the pl.when bodies (the branches
+    # are compiled as plain cond branches in interpret mode, where the
+    # primitive has no lowering).
+    edges = image_edges(pl.program_id(0), bands_per_image) if pin_halos else None
 
-    ftop = jnp.where(i > 0, f_top[...], ident)
-    fbot = jnp.where(i < n - 1, f_bot[...], ident)
-    mtop = jnp.where(i > 0, m_top[...], ident)
-    mbot = jnp.where(i < n - 1, m_bot[...], ident)
+    @pl.when(active[0, 0] == 0)
+    def _passthrough():
+        # converged band: pass the input through, report no change.
+        out[...] = f_mid[...]
+        changed[...] = jnp.zeros((1, 1), jnp.int32)
 
-    stack = jnp.concatenate([ftop, f_mid[...], fbot], axis=0)
-    mask = jnp.concatenate([mtop, m_mid[...], mbot], axis=0)
+    @pl.when(active[0, 0] > 0)
+    def _compute():
+        ident = ident_for(op, f_mid.dtype)
+        ftop, fbot = f_top[...], f_bot[...]
+        mtop, mbot = m_top[...], m_bot[...]
+        if pin_halos:
+            # Pin the out-of-image halo: marker ← identity, mask ←
+            # identity, so the pad region is absorbing and transmits
+            # nothing (also between stacked batch images).
+            at_top, at_bot = edges
+            ftop = jnp.where(at_top, ident, ftop)
+            fbot = jnp.where(at_bot, ident, fbot)
+            mtop = jnp.where(at_top, ident, mtop)
+            mbot = jnp.where(at_bot, ident, mbot)
 
-    clamp = jnp.maximum if op == "erode" else jnp.minimum
-    for _ in range(fuse_k):
-        stack = clamp(elementary_3x3(stack, op), mask)
+        stack = jnp.concatenate([ftop, f_mid[...], fbot], axis=0)
+        mask = jnp.concatenate([mtop, m_mid[...], mbot], axis=0)
 
-    centre = stack[fuse_k : fuse_k + band_h, :]
-    out[...] = centre
-    changed[...] = jnp.any(centre != f_mid[...]).astype(jnp.int32).reshape(1, 1)
+        clamp = jnp.maximum if op == "erode" else jnp.minimum
+        for _ in range(fuse_k):
+            stack = clamp(elementary_3x3(stack, op), mask)
+
+        centre = stack[fuse_k : fuse_k + band_h, :]
+        out[...] = centre
+        changed[...] = (
+            jnp.any(centre != f_mid[...]).astype(jnp.int32).reshape(1, 1)
+        )
 
 
 def geodesic_chain_step(
@@ -66,8 +97,15 @@ def geodesic_chain_step(
     fuse_k: int,
     band_h: int,
     interpret: bool = True,
+    active: jnp.ndarray | None = None,
+    bands_per_image: int | None = None,
 ):
-    """K fused geodesic steps on pre-padded marker/mask.
+    """K fused geodesic steps on a pre-padded marker/mask (stack).
+
+    ``f``/``m`` are (H, W) with H a multiple of ``band_h`` — possibly a
+    vertical stack of ``H // (bands_per_image · band_h)`` images.
+    ``active`` is an optional (n_bands, 1) int32 activity vector; bands
+    with 0 are skipped (input copied through, flag 0).
 
     Returns (new_marker, changed) with changed an (n_bands, 1) int32.
     """
@@ -75,20 +113,30 @@ def geodesic_chain_step(
     assert f.shape == m.shape
     assert h % band_h == 0 and band_h % fuse_k == 0
     n_bands = h // band_h
+    if bands_per_image is None:
+        bands_per_image = n_bands
+    assert n_bands % bands_per_image == 0
+    if active is None:
+        active = jnp.ones((n_bands, 1), jnp.int32)
     r = band_h // fuse_k
     last_k_block = h // fuse_k - 1
 
+    act_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
     top_spec = pl.BlockSpec((fuse_k, w), lambda i: (jnp.maximum(i * r - 1, 0), 0))
     mid_spec = pl.BlockSpec((band_h, w), lambda i: (i, 0))
     bot_spec = pl.BlockSpec(
         (fuse_k, w), lambda i: (jnp.minimum((i + 1) * r, last_k_block), 0)
     )
 
-    kern = functools.partial(_geodesic_kernel, op=op, fuse_k=fuse_k, band_h=band_h)
+    kern = functools.partial(
+        _geodesic_kernel, op=op, fuse_k=fuse_k, band_h=band_h,
+        bands_per_image=bands_per_image, pin_halos=True,
+    )
     out, changed = pl.pallas_call(
         kern,
         grid=(n_bands,),
-        in_specs=[top_spec, mid_spec, bot_spec, top_spec, mid_spec, bot_spec],
+        in_specs=[act_spec, top_spec, mid_spec, bot_spec,
+                  top_spec, mid_spec, bot_spec],
         out_specs=[
             pl.BlockSpec((band_h, w), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
@@ -98,5 +146,56 @@ def geodesic_chain_step(
             jax.ShapeDtypeStruct((n_bands, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(f, f, f, m, m, m)
+    )(active, f, f, f, m, m, m)
+    return out, changed
+
+
+def geodesic_compact_step(
+    f_top: jnp.ndarray,
+    f_mid: jnp.ndarray,
+    f_bot: jnp.ndarray,
+    m_top: jnp.ndarray,
+    m_mid: jnp.ndarray,
+    m_bot: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    op: str,
+    fuse_k: int,
+    band_h: int,
+    interpret: bool = True,
+):
+    """Compacted-grid variant: the driver has already gathered the
+    active bands (and their halos, with image-edge pinning applied) into
+    dense workspaces, so block ``i`` simply reads slot ``i`` of each
+    operand.  ``valid`` masks workspace slots past the true active count
+    (their output is dropped at scatter time anyway).
+
+    Shapes: f_mid/m_mid (C·band_h, W); f_top/f_bot/m_top/m_bot
+    (C·fuse_k, W); valid (C, 1) int32.  Returns (new_mid, changed).
+    """
+    cap_bh, w = f_mid.shape
+    assert cap_bh % band_h == 0
+    cap = cap_bh // band_h
+    assert f_top.shape == (cap * fuse_k, w)
+
+    halo_spec = pl.BlockSpec((fuse_k, w), lambda i: (i, 0))
+    mid_spec = pl.BlockSpec((band_h, w), lambda i: (i, 0))
+    flag_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+
+    kern = functools.partial(
+        _geodesic_kernel, op=op, fuse_k=fuse_k, band_h=band_h,
+        bands_per_image=cap, pin_halos=False,
+    )
+    out, changed = pl.pallas_call(
+        kern,
+        grid=(cap,),
+        in_specs=[flag_spec, halo_spec, mid_spec, halo_spec,
+                  halo_spec, mid_spec, halo_spec],
+        out_specs=[mid_spec, flag_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap_bh, w), f_mid.dtype),
+            jax.ShapeDtypeStruct((cap, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(valid, f_top, f_mid, f_bot, m_top, m_mid, m_bot)
     return out, changed

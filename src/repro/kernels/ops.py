@@ -18,11 +18,32 @@ wrapper:
   * ``"xla"``     — same chunked schedule but pure-jnp bodies; what the
     framework runs when Pallas is unavailable.  Still one compiled
     program per chain (unlike the per-filter "naive" baseline).
+
+Batching: every public op accepts either a single (H, W) image or an
+(N, H, W) stack.  The stack is laid out vertically as one
+(N·H_pad, W_pad) working array so a single kernel grid covers all
+images; halo pinning at image edges (``bands_per_image``) keeps the
+images independent.
+
+Active-band requeue scheduling (the paper's Alg. 4 requeue mechanism):
+the convergence-driven drivers (``reconstruct``, ``qdt_planes``) keep
+the per-band ``changed`` flags as a live activity vector instead of
+collapsing them into one global bit.  A band is requeued for the next
+K-chunk iff it *or a vertical neighbour* changed — influence propagates
+at most ``fuse_k <= band_h`` rows per chunk, so a one-band halo
+(``plan.requeue_halo``) is exact.  Inactive bands are skipped by the
+kernel (``pl.when`` early-out); once the active fraction drops below
+``plan.compact_threshold`` the driver additionally *compacts*: it
+gathers the active bands (and their pre-pinned halos) into a dense
+workspace of ``plan.compact_capacity`` bands and launches the smaller
+grid, scattering results back.  Per-image convergence in batched mode
+falls out for free: a finished image's bands all go inactive and stop
+contributing work while the remaining images iterate.
 """
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -31,25 +52,135 @@ from repro.core import morphology as M
 from repro.core.chain import ChainPlan, plan_chain
 from repro.kernels.common import ident_for
 from repro.kernels.erode_chain import chain_step
-from repro.kernels.geodesic_chain import geodesic_chain_step
-from repro.kernels.qdt_chain import qdt_chain_step
+from repro.kernels.geodesic_chain import geodesic_chain_step, geodesic_compact_step
+from repro.kernels.qdt_chain import qdt_chain_step, qdt_compact_step
 
 Backend = Literal["pallas", "xla"]
 
 _INTERPRET = jax.default_backend() != "tpu"
 
 
-def _pad(f: jnp.ndarray, plan: ChainPlan, fill) -> jnp.ndarray:
-    h, w = f.shape
+class ReconstructStats(NamedTuple):
+    """Per-run scheduling statistics (the paper's Table 5 chain lengths,
+    extended with the requeue scheduler's band-level accounting)."""
+
+    chunks: jnp.ndarray           # int32: K-chunk iterations executed
+    active_band_sum: jnp.ndarray  # int32: Σ scheduled bands over all chunks
+    total_bands: jnp.ndarray      # int32: bands in the padded stack
+    active_per_chunk: jnp.ndarray  # int32[max_chunks], 0 past ``chunks``
+
+
+# ---------------------------------------------------------------------------
+# layout helpers: batch promotion, padding, vertical stacking
+# ---------------------------------------------------------------------------
+
+
+def _as_stack(f: jnp.ndarray):
+    """Promote (H, W) to (1, H, W); pass (N, H, W) through."""
+    if f.ndim == 2:
+        return f[None], True
+    if f.ndim == 3:
+        return f, False
+    raise ValueError(f"expected (H, W) or (N, H, W), got shape {f.shape}")
+
+
+def _pad(f3: jnp.ndarray, plan: ChainPlan, fill) -> jnp.ndarray:
+    n, h, w = f3.shape
     return jnp.pad(
-        f,
-        ((0, plan.height_pad - h), (0, plan.width_pad - w)),
+        f3,
+        ((0, 0), (0, plan.height_pad - h), (0, plan.width_pad - w)),
         constant_values=fill,
     )
 
 
-def _crop(f: jnp.ndarray, shape) -> jnp.ndarray:
-    return f[: shape[0], : shape[1]]
+def _crop(f3: jnp.ndarray, shape, was_2d: bool) -> jnp.ndarray:
+    out = f3[:, : shape[-2], : shape[-1]]
+    return out[0] if was_2d else out
+
+
+def _stacked(x3: jnp.ndarray) -> jnp.ndarray:
+    """(N, H_pad, W_pad) → (N·H_pad, W_pad); free (row-major)."""
+    return x3.reshape(x3.shape[0] * x3.shape[1], x3.shape[2])
+
+
+def _unstacked(x2: jnp.ndarray, n: int) -> jnp.ndarray:
+    return x2.reshape(n, x2.shape[0] // n, x2.shape[1])
+
+
+def _plan_for(f3: jnp.ndarray, plan: ChainPlan | None) -> None:
+    """Validate an explicitly supplied plan against the input stack."""
+    if plan is None:
+        return
+    n, h, w = f3.shape
+    if plan.n_images != n:
+        raise ValueError(f"plan.n_images={plan.n_images} != batch size {n}")
+    if plan.height_pad < h or plan.width_pad < w:
+        raise ValueError(
+            f"plan pads ({plan.height_pad}, {plan.width_pad}) smaller than "
+            f"image ({h}, {w})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# active-band bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def _dilate_active(flags: jnp.ndarray, plan: ChainPlan) -> jnp.ndarray:
+    """Requeue set from changed flags: a band is active next chunk iff it
+    or a vertical neighbour (within the same image) changed."""
+    a = flags.reshape(plan.n_images, plan.n_bands)
+    for _ in range(plan.requeue_halo):
+        up = jnp.pad(a[:, 1:], ((0, 0), (0, 1)))
+        dn = jnp.pad(a[:, :-1], ((0, 0), (1, 0)))
+        a = jnp.maximum(a, jnp.maximum(up, dn))
+    return a.reshape(-1, 1)
+
+
+def _gather_mid(x2: jnp.ndarray, idx: jnp.ndarray, plan: ChainPlan) -> jnp.ndarray:
+    """Gather the centre rows of global bands ``idx`` → (C·band_h, W)."""
+    x3 = x2.reshape(-1, plan.band_h, x2.shape[1])
+    return jnp.take(x3, idx, axis=0, mode="clip").reshape(-1, x2.shape[1])
+
+
+def _gather_bands(x2: jnp.ndarray, idx: jnp.ndarray, plan: ChainPlan, ident):
+    """Gather (top, mid, bot) row blocks for global bands ``idx`` from a
+    stacked (TOTAL_H, W) array.  Halos crossing an image edge are pinned
+    to ``ident`` here, since the compact kernel cannot know slot → image
+    geometry."""
+    bh, k, nb = plan.band_h, plan.fuse_k, plan.n_bands
+    w = x2.shape[1]
+    mid = _gather_mid(x2, idx, plan)
+
+    j = idx % nb  # band-within-image (sentinel slots pin to ident, harmless)
+    top_rows = idx[:, None] * bh - k + jnp.arange(k)[None, :]
+    bot_rows = (idx[:, None] + 1) * bh + jnp.arange(k)[None, :]
+    top = jnp.take(x2, jnp.clip(top_rows, 0, x2.shape[0] - 1), axis=0)
+    bot = jnp.take(x2, jnp.clip(bot_rows, 0, x2.shape[0] - 1), axis=0)
+    top = jnp.where((j == 0)[:, None, None], ident, top)
+    bot = jnp.where((j == nb - 1)[:, None, None], ident, bot)
+    return top.reshape(-1, w), mid, bot.reshape(-1, w)
+
+
+def _scatter_mid(
+    x2: jnp.ndarray, idx: jnp.ndarray, new_mid: jnp.ndarray, plan: ChainPlan
+) -> jnp.ndarray:
+    """Scatter compact-workspace centre rows back; sentinel slots
+    (idx == total_bands, out of bounds) are dropped."""
+    w = x2.shape[1]
+    x3 = x2.reshape(-1, plan.band_h, w)
+    upd = new_mid.reshape(-1, plan.band_h, w)
+    return x3.at[idx].set(upd, mode="drop").reshape(x2.shape)
+
+
+def _active_indices(active: jnp.ndarray, plan: ChainPlan):
+    """Dense slot → global band index map for the compact workspace."""
+    total = plan.total_bands
+    idx = jnp.nonzero(
+        active.ravel() > 0, size=plan.compact_capacity, fill_value=total
+    )[0].astype(jnp.int32)
+    valid = (idx < total).astype(jnp.int32)[:, None]
+    return idx, valid
 
 
 # ---------------------------------------------------------------------------
@@ -65,30 +196,41 @@ def morph_chain(
     backend: Backend = "pallas",
     plan: ChainPlan | None = None,
 ) -> jnp.ndarray:
-    """Apply n elementary 3×3 erosions/dilations with K-step fusion."""
-    if plan is None:
-        plan = plan_chain(f.shape[0], f.shape[1], f.dtype, n)
-    k = plan.fuse_k
+    """Apply n elementary 3×3 erosions/dilations with K-step fusion.
 
+    Accepts (H, W) or a batched (N, H, W) stack.
+    """
     if backend == "xla":
         body = M.erode3 if op == "erode" else M.dilate3
         return jax.lax.fori_loop(0, n, lambda _, x: body(x), f)
 
-    x = _pad(f, plan, ident_for(op, f.dtype))
+    f3, was_2d = _as_stack(f)
+    _plan_for(f3, plan)
+    if plan is None:
+        plan = plan_chain(
+            f3.shape[1], f3.shape[2], f.dtype, n, n_images=f3.shape[0]
+        )
+    k = plan.fuse_k
+
+    x3 = _pad(f3, plan, ident_for(op, f.dtype))
     full, rem = divmod(n, k)
 
     def chunk(x, _):
         return chain_step(x, op=op, fuse_k=k, band_h=plan.band_h,
-                          interpret=_INTERPRET), None
+                          interpret=_INTERPRET,
+                          bands_per_image=plan.n_bands), None
 
     if full:
-        x, _ = jax.lax.scan(chunk, x, None, length=full)
+        x2, _ = jax.lax.scan(chunk, _stacked(x3), None, length=full)
+        x3 = _unstacked(x2, f3.shape[0])
     if rem:
         # tail chunk: fuse_k must divide band_h; run a rem-step chunk with
         # the smallest compatible fuse and finish with jnp steps if needed.
+        # (on the 3-D stack — jnp bodies are axis-polymorphic and cannot
+        # leak between images.)
         body = M.erode3 if op == "erode" else M.dilate3
-        x = jax.lax.fori_loop(0, rem, lambda _, y: body(y), x)
-    return _crop(x, f.shape)
+        x3 = jax.lax.fori_loop(0, rem, lambda _, y: body(y), x3)
+    return _crop(x3, f.shape, was_2d)
 
 
 def erode(f: jnp.ndarray, s: int, backend: Backend = "pallas") -> jnp.ndarray:
@@ -113,31 +255,45 @@ def closing(f: jnp.ndarray, s: int, backend: Backend = "pallas") -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("n", "op", "backend"))
+@functools.partial(jax.jit, static_argnames=("n", "op", "backend", "plan"))
 def geodesic_chain(
     f: jnp.ndarray,
     m: jnp.ndarray,
     n: int,
     op: str = "erode",
     backend: Backend = "pallas",
+    plan: ChainPlan | None = None,
 ) -> jnp.ndarray:
-    """n elementary geodesic steps (fixed length, Eq. 4)."""
+    """n elementary geodesic steps (fixed length, Eq. 4).
+
+    Accepts (H, W) or a batched (N, H, W) marker/mask stack.
+    """
     if backend == "xla":
         step = M.geodesic_erode1 if op == "erode" else M.geodesic_dilate1
         return jax.lax.fori_loop(0, n, lambda _, x: step(x, m), f)
 
-    plan = plan_chain(f.shape[0], f.shape[1], f.dtype, n, n_images_resident=2)
+    f3, was_2d = _as_stack(f)
+    m3, _ = _as_stack(m)
+    if f3.shape != m3.shape:
+        raise ValueError(f"marker shape {f.shape} != mask shape {m.shape}")
+    _plan_for(f3, plan)
+    if plan is None:
+        plan = plan_chain(
+            f3.shape[1], f3.shape[2], f.dtype, n,
+            n_images_resident=2, n_images=f3.shape[0],
+        )
     k = plan.fuse_k
     ident = ident_for(op, f.dtype)
     # mask pinning: pad mask with the identity so pad rows are absorbing
-    fp = _pad(f, plan, ident)
-    mp = _pad(m, plan, ident)
+    fp = _stacked(_pad(f3, plan, ident))
+    mp = _stacked(_pad(m3, plan, ident))
 
     full, rem = divmod(n, k)
 
     def chunk(x, _):
         y, _ = geodesic_chain_step(
-            x, mp, op=op, fuse_k=k, band_h=plan.band_h, interpret=_INTERPRET
+            x, mp, op=op, fuse_k=k, band_h=plan.band_h,
+            interpret=_INTERPRET, bands_per_image=plan.n_bands,
         )
         return y, None
 
@@ -145,48 +301,162 @@ def geodesic_chain(
         fp, _ = jax.lax.scan(chunk, fp, None, length=full)
     if rem:
         step = M.geodesic_erode1 if op == "erode" else M.geodesic_dilate1
-        fp = jax.lax.fori_loop(0, rem, lambda _, x: step(x, mp), fp)
-    return _crop(fp, f.shape)
+        n_img = f3.shape[0]
+        fp3 = jax.lax.fori_loop(
+            0, rem, lambda _, x: step(x, _unstacked(mp, n_img)),
+            _unstacked(fp, n_img),
+        )
+        return _crop(fp3, f.shape, was_2d)
+    return _crop(_unstacked(fp, f3.shape[0]), f.shape, was_2d)
 
 
-@functools.partial(jax.jit, static_argnames=("op", "backend", "max_chunks"))
+def _scheduled_reconstruct(fp, mp, plan: ChainPlan, op: str, max_chunks: int,
+                           with_stats: bool):
+    """Convergence loop with active-band requeue scheduling + compaction.
+
+    ``fp``/``mp`` are stacked (TOTAL_H, W_pad) arrays.  Returns
+    (out, chunks, active_band_sum, active_per_chunk).  The per-chunk
+    trace is only carried through the loop when ``with_stats`` — it is
+    a max_chunks-sized array updated by scatter every chunk, which the
+    plain ``reconstruct`` path must not pay for (XLA cannot DCE
+    loop-carried state).
+    """
+    total = plan.total_bands
+    cap = plan.compact_capacity
+    use_compact = plan.compact_threshold > 0.0 and cap < total
+    ident = ident_for(op, fp.dtype)
+
+    def full_step(x, active):
+        return geodesic_chain_step(
+            x, mp, op=op, fuse_k=plan.fuse_k, band_h=plan.band_h,
+            interpret=_INTERPRET, active=active, bands_per_image=plan.n_bands,
+        )
+
+    def compact_step(x, active):
+        idx, valid = _active_indices(active, plan)
+        ft, fm, fb = _gather_bands(x, idx, plan, ident)
+        mt, mm, mb = _gather_bands(mp, idx, plan, ident)
+        new_mid, ch = geodesic_compact_step(
+            ft, fm, fb, mt, mm, mb, valid,
+            op=op, fuse_k=plan.fuse_k, band_h=plan.band_h,
+            interpret=_INTERPRET,
+        )
+        x = _scatter_mid(x, idx, new_mid, plan)
+        flags = jnp.zeros((total, 1), jnp.int32).at[idx].set(ch, mode="drop")
+        return x, flags
+
+    def cond(state):
+        _, active, it, *_ = state
+        return jnp.logical_and(jnp.any(active > 0), it < max_chunks)
+
+    def body(state):
+        x, active, it, asum, per_chunk = state
+        count = jnp.sum(active)
+        if use_compact:
+            x, flags = jax.lax.cond(count <= cap, compact_step, full_step,
+                                    x, active)
+        else:
+            x, flags = full_step(x, active)
+        if with_stats:
+            per_chunk = per_chunk.at[it].set(count)
+        return x, _dilate_active(flags, plan), it + 1, asum + count, per_chunk
+
+    init = (
+        fp,
+        jnp.ones((total, 1), jnp.int32),
+        jnp.asarray(0, jnp.int32),
+        jnp.asarray(0, jnp.int32),
+        jnp.zeros((max_chunks if with_stats else 0,), jnp.int32),
+    )
+    out, _, it, asum, per_chunk = jax.lax.while_loop(cond, body, init)
+    return out, it, asum, per_chunk
+
+
+def _reconstruct_impl(f, m, op, backend, max_chunks, plan, with_stats=False):
+    f3, was_2d = _as_stack(f)
+    m3, _ = _as_stack(m)
+    if f3.shape != m3.shape:
+        raise ValueError(f"marker shape {f.shape} != mask shape {m.shape}")
+    _plan_for(f3, plan)
+    if plan is None:
+        plan = plan_chain(
+            f3.shape[1], f3.shape[2], f.dtype, None,
+            n_images_resident=2, n_images=f3.shape[0], convergent=True,
+        )
+    k = plan.fuse_k
+    if max_chunks is None:
+        # Geodesic influence follows mask-constrained paths, whose length
+        # is bounded by the pixel count (serpentine masks exceed the
+        # H+W Chebyshev diameter).  The cap is a safety net only: the
+        # loop exits as soon as the active set empties, so the
+        # conservative bound costs nothing at runtime.
+        max_chunks = (f3.shape[1] * f3.shape[2]) // k + 2
+    ident = ident_for(op, f.dtype)
+    fp = _stacked(_pad(f3, plan, ident))
+    mp = _stacked(_pad(m3, plan, ident))
+
+    out, chunks, asum, per_chunk = _scheduled_reconstruct(
+        fp, mp, plan, op, max_chunks, with_stats
+    )
+    stats = ReconstructStats(
+        chunks=chunks,
+        active_band_sum=asum,
+        total_bands=jnp.asarray(plan.total_bands, jnp.int32),
+        active_per_chunk=per_chunk,
+    )
+    return _crop(_unstacked(out, f3.shape[0]), f.shape, was_2d), stats
+
+
+@functools.partial(
+    jax.jit, static_argnames=("op", "backend", "max_chunks", "plan")
+)
 def reconstruct(
     f: jnp.ndarray,
     m: jnp.ndarray,
     op: str = "erode",
     backend: Backend = "pallas",
     max_chunks: int | None = None,
+    plan: ChainPlan | None = None,
 ) -> jnp.ndarray:
-    """ε_rec / δ_rec with kernel-fused convergence detection (Alg. 4)."""
+    """ε_rec / δ_rec with kernel-fused convergence detection (Alg. 4).
+
+    Accepts (H, W) or (N, H, W); in batched mode each image converges
+    independently (its bands go inactive and stop costing work).
+    """
     if backend == "xla":
         if op == "erode":
             return M.erode_reconstruct(f, m)
         return M.dilate_reconstruct(f, m)
+    out, _ = _reconstruct_impl(f, m, op, backend, max_chunks, plan)
+    return out
 
-    plan = plan_chain(f.shape[0], f.shape[1], f.dtype, None, n_images_resident=2)
-    k = plan.fuse_k
-    if max_chunks is None:
-        # geodesic influence propagates ≥1 px/step ⇒ diameter bound
-        max_chunks = (f.shape[0] + f.shape[1]) // k + 2
-    ident = ident_for(op, f.dtype)
-    fp = _pad(f, plan, ident)
-    mp = _pad(m, plan, ident)
 
-    def cond(state):
-        _, changed, it = state
-        return jnp.logical_and(changed, it < max_chunks)
-
-    def body(state):
-        x, _, it = state
-        y, flags = geodesic_chain_step(
-            x, mp, op=op, fuse_k=k, band_h=plan.band_h, interpret=_INTERPRET
+@functools.partial(
+    jax.jit, static_argnames=("op", "backend", "max_chunks", "plan")
+)
+def reconstruct_with_stats(
+    f: jnp.ndarray,
+    m: jnp.ndarray,
+    op: str = "erode",
+    backend: Backend = "pallas",
+    max_chunks: int | None = None,
+    plan: ChainPlan | None = None,
+):
+    """Like ``reconstruct`` but also returns :class:`ReconstructStats`
+    (chunk count and band-level requeue accounting — the analogue of the
+    paper's Table 5 chain lengths)."""
+    if backend == "xla":
+        out, iters = (
+            M.erode_reconstruct_with_iters(f, m) if op == "erode"
+            else M.dilate_reconstruct_with_iters(f, m)
         )
-        return y, jnp.any(flags > 0), it + 1
-
-    out, _, _ = jax.lax.while_loop(
-        cond, body, (fp, jnp.asarray(True), jnp.asarray(0, jnp.int32))
-    )
-    return _crop(out, f.shape)
+        one = jnp.asarray(1, jnp.int32)
+        return out, ReconstructStats(
+            chunks=iters, active_band_sum=iters, total_bands=one,
+            active_per_chunk=jnp.zeros((0,), jnp.int32),
+        )
+    return _reconstruct_impl(f, m, op, backend, max_chunks, plan,
+                             with_stats=True)
 
 
 # ---------------------------------------------------------------------------
@@ -194,43 +464,88 @@ def reconstruct(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "max_chunks"))
+@functools.partial(jax.jit, static_argnames=("backend", "max_chunks", "plan"))
 def qdt_planes(
     f: jnp.ndarray,
     backend: Backend = "pallas",
     max_chunks: int | None = None,
+    plan: ChainPlan | None = None,
 ):
-    """d(f), r(f) of Eq. 13 with the fused masked-store kernel."""
+    """d(f), r(f) of Eq. 13 with the fused masked-store kernel.
+
+    Accepts (H, W) or (N, H, W); runs the same active-band requeue
+    scheduler as ``reconstruct``.
+    """
     from repro.core.operators import qdt_raw
 
     if backend == "xla":
         return qdt_raw(f)
 
-    plan = plan_chain(f.shape[0], f.shape[1], f.dtype, None, n_images_resident=3)
+    f3, was_2d = _as_stack(f)
+    _plan_for(f3, plan)
+    if plan is None:
+        plan = plan_chain(
+            f3.shape[1], f3.shape[2], f.dtype, None,
+            n_images_resident=3, n_images=f3.shape[0], convergent=True,
+        )
     k = plan.fuse_k
     if max_chunks is None:
-        max_chunks = max(f.shape) // k + 2
+        max_chunks = max(f3.shape[1], f3.shape[2]) // k + 2
     acc = jnp.float32 if jnp.issubdtype(f.dtype, jnp.floating) else jnp.int32
 
-    fp = _pad(f, plan, ident_for("erode", f.dtype))
+    total = plan.total_bands
+    cap = plan.compact_capacity
+    use_compact = plan.compact_threshold > 0.0 and cap < total
+    ident = ident_for("erode", f.dtype)
+
+    fp = _stacked(_pad(f3, plan, ident))
     rp = jnp.zeros(fp.shape, acc)
     dp = jnp.zeros(fp.shape, jnp.int32)
 
+    def full_step(x, r, d, active, base):
+        return qdt_chain_step(
+            x, r, d, base, fuse_k=k, band_h=plan.band_h,
+            interpret=_INTERPRET, active=active, bands_per_image=plan.n_bands,
+        )
+
+    def compact_step(x, r, d, active, base):
+        idx, valid = _active_indices(active, plan)
+        ft, fm, fb = _gather_bands(x, idx, plan, ident)
+        rm = _gather_mid(r, idx, plan)
+        dm = _gather_mid(d, idx, plan)
+        f2, r2, d2, ch = qdt_compact_step(
+            ft, fm, fb, rm, dm, valid, base,
+            fuse_k=k, band_h=plan.band_h, interpret=_INTERPRET,
+        )
+        x = _scatter_mid(x, idx, f2, plan)
+        r = _scatter_mid(r, idx, r2, plan)
+        d = _scatter_mid(d, idx, d2, plan)
+        flags = jnp.zeros((total, 1), jnp.int32).at[idx].set(ch, mode="drop")
+        return x, r, d, flags
+
     def cond(state):
-        *_, changed, it = state
-        return jnp.logical_and(changed, it < max_chunks)
+        _, _, _, active, it = state
+        return jnp.logical_and(jnp.any(active > 0), it < max_chunks)
 
     def body(state):
-        x, r, d, _, it = state
+        x, r, d, active, it = state
         base = (it * k).astype(jnp.int32).reshape(1, 1)
-        x, r, d, flags = qdt_chain_step(
-            x, r, d, base, fuse_k=k, band_h=plan.band_h, interpret=_INTERPRET
-        )
-        return x, r, d, jnp.any(flags > 0), it + 1
+        count = jnp.sum(active)
+        if use_compact:
+            x, r, d, flags = jax.lax.cond(
+                count <= cap, compact_step, full_step, x, r, d, active, base
+            )
+        else:
+            x, r, d, flags = full_step(x, r, d, active, base)
+        return x, r, d, _dilate_active(flags, plan), it + 1
 
     _, r, d, _, _ = jax.lax.while_loop(
         cond,
         body,
-        (fp, rp, dp, jnp.asarray(True), jnp.asarray(0, jnp.int32)),
+        (fp, rp, dp, jnp.ones((total, 1), jnp.int32), jnp.asarray(0, jnp.int32)),
     )
-    return _crop(d, f.shape), _crop(r, f.shape)
+    n_img = f3.shape[0]
+    return (
+        _crop(_unstacked(d, n_img), f.shape, was_2d),
+        _crop(_unstacked(r, n_img), f.shape, was_2d),
+    )

@@ -8,6 +8,11 @@ masked store is a vectorized ``jnp.where`` on the VMEM tile.
 
 r/d only need the centre rows (their update is pointwise), so they are
 blocked without halo — only the eroding image carries the K-row halo.
+
+Like the geodesic kernel, each band carries an ``active`` scalar: once a
+band's erosion has reached the lattice bottom everywhere (no pixel
+changed, nor in its neighbours), the driver stops requeueing it and the
+kernel passes f/r/d through unchanged under ``pl.when``.
 """
 from __future__ import annotations
 
@@ -17,39 +22,56 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import elementary_3x3, ident_for
+from repro.kernels.common import elementary_3x3, ident_for, image_edges
 
 
 def _qdt_kernel(
-    base, f_top, f_mid, f_bot, r_in, d_in, f_out, r_out, d_out, changed,
-    *, fuse_k: int, band_h: int, acc_dtype,
+    base, active, f_top, f_mid, f_bot, r_in, d_in, f_out, r_out, d_out, changed,
+    *, fuse_k: int, band_h: int, acc_dtype, bands_per_image: int,
+    pin_halos: bool,
 ):
-    i = pl.program_id(0)
-    n = pl.num_programs(0)
-    ident = ident_for("erode", f_mid.dtype)
+    # program_id is not available inside pl.when branches in interpret
+    # mode — read it at kernel top level.
+    edges = image_edges(pl.program_id(0), bands_per_image) if pin_halos else None
 
-    top = jnp.where(i > 0, f_top[...], ident)
-    bot = jnp.where(i < n - 1, f_bot[...], ident)
-    stack = jnp.concatenate([top, f_mid[...], bot], axis=0)
+    @pl.when(active[0, 0] == 0)
+    def _passthrough():
+        # converged band: pass all planes through, report no change.
+        f_out[...] = f_mid[...]
+        r_out[...] = r_in[...]
+        d_out[...] = d_in[...]
+        changed[...] = jnp.zeros((1, 1), jnp.int32)
 
-    r = r_in[...]
-    d = d_in[...]
-    j0 = base[0, 0]
+    @pl.when(active[0, 0] > 0)
+    def _compute():
+        ident = ident_for("erode", f_mid.dtype)
+        top, bot = f_top[...], f_bot[...]
+        if pin_halos:
+            at_top, at_bot = edges
+            top = jnp.where(at_top, ident, top)
+            bot = jnp.where(at_bot, ident, bot)
+        stack = jnp.concatenate([top, f_mid[...], bot], axis=0)
 
-    lo, hi = fuse_k, fuse_k + band_h
-    for k in range(fuse_k):
-        nxt = elementary_3x3(stack, "erode")
-        res = stack[lo:hi, :].astype(acc_dtype) - nxt[lo:hi, :].astype(acc_dtype)
-        upd = res > r
-        r = jnp.where(upd, res, r)
-        d = jnp.where(upd, j0 + (k + 1), d)
-        stack = nxt
+        r = r_in[...]
+        d = d_in[...]
+        j0 = base[0, 0]
 
-    centre = stack[lo:hi, :]
-    f_out[...] = centre
-    r_out[...] = r
-    d_out[...] = d
-    changed[...] = jnp.any(centre != f_mid[...]).astype(jnp.int32).reshape(1, 1)
+        lo, hi = fuse_k, fuse_k + band_h
+        for k in range(fuse_k):
+            nxt = elementary_3x3(stack, "erode")
+            res = stack[lo:hi, :].astype(acc_dtype) - nxt[lo:hi, :].astype(acc_dtype)
+            upd = res > r
+            r = jnp.where(upd, res, r)
+            d = jnp.where(upd, j0 + (k + 1), d)
+            stack = nxt
+
+        centre = stack[lo:hi, :]
+        f_out[...] = centre
+        r_out[...] = r
+        d_out[...] = d
+        changed[...] = (
+            jnp.any(centre != f_mid[...]).astype(jnp.int32).reshape(1, 1)
+        )
 
 
 def qdt_chain_step(
@@ -61,15 +83,23 @@ def qdt_chain_step(
     fuse_k: int,
     band_h: int,
     interpret: bool = True,
+    active: jnp.ndarray | None = None,
+    bands_per_image: int | None = None,
 ):
     """One K-step QDT chunk on pre-padded planes.
 
     ``base`` is a (1,1) int32 with the number of erosions already applied.
+    ``active`` optionally skips converged bands (see module docstring).
     Returns (f', r', d', changed) — changed is (n_bands, 1) int32.
     """
     h, w = f.shape
     assert h % band_h == 0 and band_h % fuse_k == 0
     n_bands = h // band_h
+    if bands_per_image is None:
+        bands_per_image = n_bands
+    assert n_bands % bands_per_image == 0
+    if active is None:
+        active = jnp.ones((n_bands, 1), jnp.int32)
     rr = band_h // fuse_k
     last_k_block = h // fuse_k - 1
     acc_dtype = jnp.float32 if jnp.issubdtype(f.dtype, jnp.floating) else jnp.int32
@@ -84,12 +114,14 @@ def qdt_chain_step(
     flag_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
 
     kern = functools.partial(
-        _qdt_kernel, fuse_k=fuse_k, band_h=band_h, acc_dtype=acc_dtype
+        _qdt_kernel, fuse_k=fuse_k, band_h=band_h, acc_dtype=acc_dtype,
+        bands_per_image=bands_per_image, pin_halos=True,
     )
     return pl.pallas_call(
         kern,
         grid=(n_bands,),
-        in_specs=[scalar_spec, top_spec, mid_spec, bot_spec, mid_spec, mid_spec],
+        in_specs=[scalar_spec, flag_spec, top_spec, mid_spec, bot_spec,
+                  mid_spec, mid_spec],
         out_specs=[mid_spec, mid_spec, mid_spec, flag_spec],
         out_shape=[
             jax.ShapeDtypeStruct((h, w), f.dtype),
@@ -98,4 +130,54 @@ def qdt_chain_step(
             jax.ShapeDtypeStruct((n_bands, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(base, f, f, f, r, d)
+    )(base, active, f, f, f, r, d)
+
+
+def qdt_compact_step(
+    f_top: jnp.ndarray,
+    f_mid: jnp.ndarray,
+    f_bot: jnp.ndarray,
+    r_mid: jnp.ndarray,
+    d_mid: jnp.ndarray,
+    valid: jnp.ndarray,
+    base: jnp.ndarray,
+    *,
+    fuse_k: int,
+    band_h: int,
+    interpret: bool = True,
+):
+    """Compacted-grid QDT chunk on driver-gathered active bands.
+
+    Shapes mirror ``geodesic_compact_step``: f_mid/r_mid/d_mid
+    (C·band_h, W), f_top/f_bot (C·fuse_k, W), valid (C, 1) int32,
+    base (1, 1) int32.  Returns (f', r', d', changed).
+    """
+    cap_bh, w = f_mid.shape
+    assert cap_bh % band_h == 0
+    cap = cap_bh // band_h
+    acc_dtype = jnp.float32 if jnp.issubdtype(f_mid.dtype, jnp.floating) else jnp.int32
+    assert r_mid.dtype == acc_dtype and d_mid.dtype == jnp.int32
+
+    halo_spec = pl.BlockSpec((fuse_k, w), lambda i: (i, 0))
+    mid_spec = pl.BlockSpec((band_h, w), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    flag_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+
+    kern = functools.partial(
+        _qdt_kernel, fuse_k=fuse_k, band_h=band_h, acc_dtype=acc_dtype,
+        bands_per_image=cap, pin_halos=False,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(cap,),
+        in_specs=[scalar_spec, flag_spec, halo_spec, mid_spec, halo_spec,
+                  mid_spec, mid_spec],
+        out_specs=[mid_spec, mid_spec, mid_spec, flag_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap_bh, w), f_mid.dtype),
+            jax.ShapeDtypeStruct((cap_bh, w), acc_dtype),
+            jax.ShapeDtypeStruct((cap_bh, w), jnp.int32),
+            jax.ShapeDtypeStruct((cap, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(base, valid, f_top, f_mid, f_bot, r_mid, d_mid)

@@ -11,14 +11,21 @@ jax device state (the dry-run sets XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType only exists in newer jax; Auto is the old default anyway
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(axes):
+        return {"axis_types": (AxisType.Auto,) * len(axes)}
+except ImportError:  # pragma: no cover - depends on installed jax
+    def _axis_kwargs(axes):
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(axes))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:
@@ -32,5 +39,4 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     n = len(jax.devices())
     if shape is None:
         shape = (n, 1)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(axes))

@@ -2,6 +2,10 @@
 (paper §2 algebra)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra.numpy import arrays
 
