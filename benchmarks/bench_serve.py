@@ -1,0 +1,60 @@
+"""Serving throughput: single-request latency vs micro-batched
+throughput across bucket sizes, through the full ``repro.serve`` stack
+(bucketing, compiled-plan cache, double-buffered executor).
+
+Rows come straight from :meth:`ServeMetrics.bench_rows`, so the derived
+column carries the serving-native metrics (latency percentiles, batch
+occupancy, cache hit-rate, FPS / MPx-per-s) and ``run.py --json``
+captures serving throughput alongside the kernel benchmarks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.images import blobs
+from repro.serve import Service
+
+#: Ops benched per bucket size: one convergence-driven reconstruction,
+#: one fixed chain.
+_OPS = (("hmax", {"h": 40}), ("erode", {"s": 16}))
+
+
+def _stream(service: Service, frames, n_round: int):
+    tickets = [
+        service.submit(op, f, params=params)
+        for _ in range(n_round)
+        for f in frames
+        for op, params in _OPS
+    ]
+    service.flush()
+    for t in tickets:
+        t.result()
+
+
+def run(quick: bool = True):
+    size = 128 if quick else 512
+    backend = "xla" if quick else "pallas"
+    batches = (1, 4) if quick else (1, 4, 8)
+    n_frames = 4 if quick else 8
+    rounds = 2 if quick else 3
+    frames = [blobs(size, size, np.uint8, seed=i) for i in range(n_frames)]
+
+    rows = []
+    for max_batch in batches:
+        service = Service(backend=backend, max_batch=max_batch,
+                          max_delay_ms=1e6, pad_quantum=64)
+        service.warmup(
+            {"op": op, "params": params, "shape": (size, size),
+             "dtype": np.uint8, "batch": max_batch}
+            for op, params in _OPS
+        )
+        _stream(service, frames, rounds)
+        for r in service.bench_rows():
+            r["name"] = r["name"].replace("serve/", f"serve/b{max_batch}/")
+            rows.append(r)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

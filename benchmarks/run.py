@@ -15,6 +15,9 @@ Modules:
   operators  paper Table 5 (geodesic operators vs queue baselines)
   crossover  paper §4.3/§5 (chained 3×3 vs O(1)/px window crossover)
   roofline   §Roofline terms from the dry-run artifacts
+  serve      repro.serve micro-batching: single-request latency vs
+             batched throughput across bucket sizes (occupancy, cache
+             hit-rate and FPS in the derived column)
 """
 from __future__ import annotations
 
@@ -23,7 +26,8 @@ import json
 import pathlib
 
 from benchmarks import (bench_chain, bench_crossover, bench_dims,
-                        bench_operators, bench_roofline, bench_table3)
+                        bench_operators, bench_roofline, bench_serve,
+                        bench_table3)
 from benchmarks.common import emit
 
 MODULES = {
@@ -33,6 +37,7 @@ MODULES = {
     "crossover": bench_crossover,
     "table3": bench_table3,
     "roofline": bench_roofline,
+    "serve": bench_serve,
 }
 
 

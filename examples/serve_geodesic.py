@@ -1,105 +1,125 @@
-"""End-to-end driver (the paper's kind is image processing, so serving):
-a batched geodesic-operator service processing a stream of image
-requests, with per-operator latency/throughput accounting and the >30
-FPS-style headline metric of the paper's conclusion.
+"""End-to-end serving demo on ``repro.serve``: a stream of heterogeneous
+image requests flows through the shape-bucketed micro-batching service
+— bucketing, compiled-plan caching, double-buffered execution and
+demuxing all happen inside the subsystem (no hand-rolled batching
+loop), and the run ends with the service's own metrics report
+(per-bucket latency percentiles, batch occupancy, cache hit-rate, the
+paper's FPS / MPx-per-s headline numbers).
 
-    PYTHONPATH=src python examples/serve_geodesic.py [--frames 24] [--size 512]
-                                                     [--batch 4]
+    PYTHONPATH=src python examples/serve_geodesic.py [--frames 24]
+        [--size 256] [--batch 4] [--backend pallas|xla] [--mixed-sizes]
 
-``--batch N`` additionally runs the batched (N, H, W) path: frames are
-stacked and pushed through one compiled program per operator, so the
-kernel grid covers the whole stack (and, for reconstruction, finished
-images stop contributing band work while the rest iterate).
+The service is declared as data (``SERVICE``): operator names + params
+resolved through the registry.  ``--mixed-sizes`` varies frame shapes to
+exercise pad-to-bucket canonicalization; frames of different sizes that
+round to the same bucket share one compiled program.
 """
 import argparse
-import time
+import json
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.core import operators as OPS
 from repro.data.images import basins, blobs, border_objects
-from repro.kernels import ops
+from repro.serve import Service
+
+#: The served operator mix, declared as data: (op name, params).
+SERVICE = (
+    ("hmax", {"h": 40}),
+    ("dome", {"h": 40}),
+    ("hfill", {}),
+    ("raobj", {}),
+    ("open_rec", {"s": 8}),
+    ("erode", {"s": 16}),
+    ("asf", {"s": 3}),
+)
+
+_KINDS = (blobs, basins, border_objects)
 
 
-def build_service(quick_ops=True):
-    """The service compiles one program per operator once, then streams."""
-    return {
-        "hmax40": jax.jit(lambda f: OPS.hmax(f, 40)),
-        "dome40": jax.jit(lambda f: OPS.dome(f, 40)),
-        "hfill": jax.jit(OPS.hfill),
-        "raobj": jax.jit(OPS.raobj),
-        "open_rec8": jax.jit(lambda f: OPS.opening_by_reconstruction(f, 8)),
-        "asf3": jax.jit(lambda f: OPS.asf(f, 3)),
-        "chain256": jax.jit(lambda f: ops.morph_chain(f, 256, "erode",
-                                                      "xla")),
-    }
-
-
-def build_batched_service():
-    """Batched front-end: one program per operator over (N, H, W) stacks.
-
-    The reconstruction-based operators route through the Pallas fast
-    path (active-band requeue scheduling) via ``backend="pallas"``."""
-    return {
-        "hmax40": jax.jit(lambda f: OPS.hmax(f, 40, backend="pallas")),
-        "hfill": jax.jit(lambda f: OPS.hfill(f, backend="pallas")),
-        "raobj": jax.jit(lambda f: OPS.raobj(f, backend="pallas")),
-        "erode16": jax.jit(lambda f: ops.erode(f, 16)),
-    }
+def make_frames(n, size, mixed_sizes):
+    """Alternating image kinds (different convergence behaviour, like
+    the paper's Male/Airport/Airplane), optionally ragged sizes."""
+    frames = []
+    for i in range(n):
+        h = w = size
+        if mixed_sizes:
+            h = size - 16 * (i % 3)
+            w = size - 8 * (i % 5)
+        frames.append(_KINDS[i % 3](h, w, np.uint8, seed=i))
+    return frames
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=12)
     ap.add_argument("--size", type=int, default=256)
-    ap.add_argument("--batch", type=int, default=0,
-                    help="also run the batched (N, H, W) path with this "
-                         "batch size")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="max micro-batch size per bucket")
+    ap.add_argument("--backend", choices=("pallas", "xla"), default="pallas")
+    ap.add_argument("--max-delay-ms", type=float, default=50.0)
+    ap.add_argument("--mixed-sizes", action="store_true",
+                    help="vary frame shapes to exercise bucket padding")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the full metrics summary as JSON")
     args = ap.parse_args()
 
-    service = build_service()
-    # request stream: alternating image kinds (different convergence
-    # behaviour, like the paper's Male/Airport/Airplane)
-    frames = [
-        jnp.asarray({0: blobs, 1: basins, 2: border_objects}[i % 3](
-            args.size, args.size, np.uint8, seed=i))
-        for i in range(args.frames)
+    service = Service(
+        backend=args.backend,
+        max_batch=args.batch,
+        max_delay_ms=args.max_delay_ms,
+        pad_quantum=64,
+    )
+    frames = make_frames(args.frames, args.size, args.mixed_sizes)
+
+    # Warm-up prefill: compile one program per (op, bucket, batch size)
+    # before traffic arrives, so the stream below measures steady-state.
+    # Every canonical batch size (powers of two up to --batch) is warmed
+    # so deadline flushes and leftover partial batches also hit.
+    batch_sizes, b = {args.batch}, 1
+    while b < args.batch:
+        batch_sizes.add(b)
+        b *= 2
+    shapes = sorted({f.shape for f in frames})
+    service.warmup(
+        {"op": op, "params": params, "shape": s, "dtype": np.uint8,
+         "batch": b}
+        for op, params in SERVICE for s in shapes
+        for b in sorted(batch_sizes)
+    )
+
+    print(f"geodesic serve: {args.frames} frames @ ~{args.size}px u8, "
+          f"{len(SERVICE)} ops, max_batch={args.batch}, "
+          f"backend={args.backend}")
+
+    # The request stream: every frame fans out to every configured op.
+    tickets = [
+        service.submit(op, f, params=params)
+        for f in frames for op, params in SERVICE
     ]
+    service.flush()
+    for t in tickets:          # surfaces any per-request failure
+        t.result()
 
-    print(f"geodesic service: {args.frames} frames @ "
-          f"{args.size}x{args.size} u8")
-    for name, fn in service.items():
-        fn(frames[0]).block_until_ready()      # compile once
-        t0 = time.perf_counter()
-        for f in frames:
-            fn(f).block_until_ready()
-        dt = time.perf_counter() - t0
-        fps = args.frames / dt
-        mpx = args.frames * args.size**2 / dt / 1e6
-        print(f"  {name:10s} {dt/args.frames*1e3:8.1f} ms/frame "
-              f"{fps:7.1f} FPS  {mpx:8.1f} MPx/s")
+    stats = service.stats()
+    print(f"\n{'bucket':44s} {'req':>4s} {'occ':>5s} {'p50ms':>8s} "
+          f"{'p99ms':>8s} {'FPS':>7s} {'MPx/s':>8s}")
+    for label, b in stats["buckets"].items():
+        print(f"{label:44s} {b['requests']:4d} {b['batch_occupancy']:5.2f} "
+              f"{b['latency']['p50_ms']:8.1f} {b['latency']['p99_ms']:8.1f} "
+              f"{b['fps']:7.1f} {b['mpx_per_s']:8.2f}")
+    tot, cache = stats["totals"], stats["cache"]
+    print(f"\ntotals: {tot['requests']} requests, "
+          f"occupancy={tot['batch_occupancy']:.2f}, "
+          f"fps={tot['fps']:.1f}, mpx/s={tot['mpx_per_s']:.2f}")
+    print(f"cache:  {cache['entries']} programs, "
+          f"hit_rate={cache['hit_rate']:.2f} "
+          f"({cache['hits']} hits / {cache['misses']} misses, "
+          f"{cache['warm_builds']} warm)")
 
-    if args.batch > 1:
-        n = min(args.batch, len(frames))
-        stacks = [jnp.asarray(np.stack([np.asarray(f) for f in
-                                        frames[i:i + n]]))
-                  for i in range(0, len(frames) - n + 1, n)]
-        dropped = len(frames) - len(stacks) * n
-        print(f"batched path: {len(stacks)} stacks of {n} frames"
-              + (f" ({dropped} leftover frames skipped)" if dropped else ""))
-        for name, fn in build_batched_service().items():
-            fn(stacks[0]).block_until_ready()  # compile once
-            t0 = time.perf_counter()
-            for s in stacks:
-                fn(s).block_until_ready()
-            dt = time.perf_counter() - t0
-            n_frames = len(stacks) * n
-            fps = n_frames / dt
-            mpx = n_frames * args.size**2 / dt / 1e6
-            print(f"  {name:10s} {dt/len(stacks)*1e3:8.1f} ms/stack "
-                  f"{fps:7.1f} FPS  {mpx:8.1f} MPx/s")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(stats, fh, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -92,6 +92,18 @@ class ChainPlan:
             raise ValueError("compact_threshold must be in [0, 1]")
 
     @property
+    def key(self) -> tuple:
+        """Hashable compact identity for compiled-program caches
+        (``repro.serve`` keys its jit entries on this together with the
+        op/params/dtype/backend): exactly the fields that determine the
+        compiled schedule.  ``ChainPlan`` itself is hashable (frozen
+        dataclass) and usable as a ``jax.jit`` static argument; ``key``
+        is the stable serialization-friendly form."""
+        return (self.band_h, self.fuse_k, self.width_pad, self.height_pad,
+                self.n_bands, self.n_chunks, self.n_images,
+                self.requeue_halo, self.compact_threshold)
+
+    @property
     def total_bands(self) -> int:
         """Grid size for the stacked (n_images · height_pad) working array."""
         return self.n_bands * self.n_images

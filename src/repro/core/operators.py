@@ -245,3 +245,40 @@ def asf(f: jnp.ndarray, s: int) -> jnp.ndarray:
 def asf_chain_length(s: int) -> int:
     """Number of elementary 3×3 filters in ASF_s (for Table 5 analogue)."""
     return sum(4 * k for k in range(1, s + 1))
+
+
+# ---------------------------------------------------------------------------
+# serving registry hooks
+# ---------------------------------------------------------------------------
+
+#: Registry hooks for ``repro.serve``: each public geodesic operator
+#: declared as data (name + param schema) next to its implementation.
+#:
+#: ``marker_reconstruct`` ops split into a per-request ``marker`` stage
+#: (runs on the *unpadded* image, so per-image reductions like
+#: ``hfill_marker``'s interior max never see bucket padding) and a
+#: batched reconstruction stage that the serve cache compiles once per
+#: bucket; ``residual=True`` subtracts the reconstruction from the
+#: original after cropping (DOME / RAOBJ).  ``whole_image`` ops run as
+#: one jnp program and are bucketed by exact shape (ASF alternates
+#: openings and closings, and the regularized QDT's η-iteration is
+#: conditional — neither admits an absorbing pad fill).
+SERVE_OPS = (
+    dict(name="hmax", kind="marker_reconstruct", direction="dilate",
+         marker=lambda f, p: sat_sub(f, p["h"]),
+         params={"h": dict(type="float", required=True)}),
+    dict(name="dome", kind="marker_reconstruct", direction="dilate",
+         marker=lambda f, p: sat_sub(f, p["h"]), residual=True,
+         params={"h": dict(type="float", required=True)}),
+    dict(name="hfill", kind="marker_reconstruct", direction="erode",
+         marker=lambda f, p: hfill_marker(f), params={}),
+    dict(name="raobj", kind="marker_reconstruct", direction="dilate",
+         marker=lambda f, p: raobj_marker(f), residual=True, params={}),
+    dict(name="open_rec", kind="marker_reconstruct", direction="dilate",
+         marker=lambda f, p: M.erode(f, p["s"]),
+         params={"s": dict(type="int", required=True, min=1)}),
+    dict(name="asf", kind="whole_image", fn=lambda f, p: asf(f, p["s"]),
+         params={"s": dict(type="int", required=True, min=1)}),
+    dict(name="qdt_l1", kind="whole_image", fn=lambda f, p: qdt(f),
+         params={}),
+)

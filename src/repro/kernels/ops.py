@@ -310,32 +310,147 @@ def geodesic_chain(
     return _crop(_unstacked(fp, f3.shape[0]), f.shape, was_2d)
 
 
-def _scheduled_reconstruct(fp, mp, plan: ChainPlan, op: str, max_chunks: int,
-                           with_stats: bool):
-    """Convergence loop with active-band requeue scheduling + compaction.
+def _drive_scheduler(
+    plan: ChainPlan,
+    data,
+    *,
+    full_step,
+    compact_step=None,
+    gather_const=None,
+    max_chunks: int,
+    with_stats: bool = False,
+):
+    """Shared active-band requeue driver loop (the paper's Alg. 4 work
+    queue).  One loop serves every convergence-driven chain —
+    reconstruction, QDT, and whatever ``repro.serve`` routes through
+    them — and owns the full-grid/compact-grid cond, the changed-flag →
+    requeue-set dilation, per-image chunk counters, and the scheduling
+    statistics.  The chain being driven is supplied as a state pytree
+    plus step functions:
 
-    ``fp``/``mp`` are stacked (TOTAL_H, W_pad) arrays.  Returns
-    (out, chunks, active_band_sum, active_per_chunk).  The per-chunk
-    trace is only carried through the loop when ``with_stats`` — it is
-    a max_chunks-sized array updated by scatter every chunk, which the
-    plain ``reconstruct`` path must not pay for (XLA cannot DCE
-    loop-carried state).
+    ``full_step(data, active, base) -> (data, flags)``
+        one K-chunk over the full stacked grid.  ``base`` is a
+        (total_bands, 1) int32 giving the number of elementary filters
+        already applied to each band's *image* — counters advance
+        per-image, only while the image still has active bands, so
+        ragged-converged stacks stay consistent (QDT indexes its
+        d-plane with it; reconstruction ignores it).
+    ``compact_step(data, idx, valid, const, base) -> (data, flags)``
+        one K-chunk on the compacted grid of gathered bands ``idx``
+        (``valid`` masks workspace slots past the true active count).
+    ``gather_const(idx) -> pytree``
+        gathers the *chunk-invariant* compact operands (e.g. the
+        geodesic mask bands).  The driver caches the result and reuses
+        it while the active band set is unchanged between chunks, so a
+        localized wavefront iterating inside the same bands does not
+        re-gather the mask every chunk.
+
+    Returns (data, chunks, active_band_sum, active_per_chunk).  The
+    per-chunk trace is only carried through the loop when
+    ``with_stats`` — it is a max_chunks-sized array updated by scatter
+    every chunk, which the plain paths must not pay for (XLA cannot
+    DCE loop-carried state).
     """
     total = plan.total_bands
     cap = plan.compact_capacity
-    use_compact = plan.compact_threshold > 0.0 and cap < total
+    use_compact = (
+        compact_step is not None
+        and plan.compact_threshold > 0.0
+        and cap < total
+    )
+    with_cache = use_compact and gather_const is not None
+
+    if with_cache:
+        # A never-matching key forces a gather on the first compact
+        # chunk; the initial value only fixes the cache pytree's shapes.
+        key0 = jnp.full((cap,), -1, jnp.int32)
+        val0 = gather_const(jnp.full((cap,), total, jnp.int32))
+    else:
+        key0, val0 = jnp.zeros((0,), jnp.int32), ()
+
+    def img_active(active):
+        return jnp.any(active.reshape(plan.n_images, plan.n_bands) > 0, axis=1)
+
+    def cond(state):
+        active, it = state[1], state[2]
+        return jnp.logical_and(jnp.any(active > 0), it < max_chunks)
+
+    def body(state):
+        data, active, it, img_chunks, asum, per_chunk, ckey, cval = state
+        count = jnp.sum(active)
+        base = jnp.repeat(img_chunks * plan.fuse_k, plan.n_bands)[:, None]
+
+        def do_full(data, ckey, cval):
+            out, flags = full_step(data, active, base)
+            return out, flags, ckey, cval
+
+        def do_compact(data, ckey, cval):
+            idx, valid = _active_indices(active, plan)
+            if with_cache:
+                cval = jax.lax.cond(
+                    jnp.all(idx == ckey), lambda: cval,
+                    lambda: gather_const(idx),
+                )
+                ckey = idx
+            out, flags = compact_step(data, idx, valid, cval, base)
+            return out, flags, ckey, cval
+
+        if use_compact:
+            data, flags, ckey, cval = jax.lax.cond(
+                count <= cap, do_compact, do_full, data, ckey, cval
+            )
+        else:
+            data, flags, ckey, cval = do_full(data, ckey, cval)
+        if with_stats:
+            per_chunk = per_chunk.at[it].set(count)
+        return (
+            data,
+            _dilate_active(flags, plan),
+            it + 1,
+            img_chunks + img_active(active).astype(jnp.int32),
+            asum + count,
+            per_chunk,
+            ckey,
+            cval,
+        )
+
+    init = (
+        data,
+        jnp.ones((total, 1), jnp.int32),
+        jnp.asarray(0, jnp.int32),
+        jnp.zeros((plan.n_images,), jnp.int32),
+        jnp.asarray(0, jnp.int32),
+        jnp.zeros((max_chunks if with_stats else 0,), jnp.int32),
+        key0,
+        val0,
+    )
+    data, _, it, _, asum, per_chunk, _, _ = jax.lax.while_loop(cond, body, init)
+    return data, it, asum, per_chunk
+
+
+def _scheduled_reconstruct(fp, mp, plan: ChainPlan, op: str, max_chunks: int,
+                           with_stats: bool):
+    """Reconstruction's step functions for :func:`_drive_scheduler`.
+
+    ``fp``/``mp`` are stacked (TOTAL_H, W_pad) arrays.  The mask is
+    chunk-invariant, so its compact-workspace gather goes through the
+    driver's ``gather_const`` cache.
+    """
+    total = plan.total_bands
     ident = ident_for(op, fp.dtype)
 
-    def full_step(x, active):
+    def full_step(x, active, base):
         return geodesic_chain_step(
             x, mp, op=op, fuse_k=plan.fuse_k, band_h=plan.band_h,
             interpret=_INTERPRET, active=active, bands_per_image=plan.n_bands,
         )
 
-    def compact_step(x, active):
-        idx, valid = _active_indices(active, plan)
+    def gather_const(idx):
+        return _gather_bands(mp, idx, plan, ident)
+
+    def compact_step(x, idx, valid, mask_bands, base):
         ft, fm, fb = _gather_bands(x, idx, plan, ident)
-        mt, mm, mb = _gather_bands(mp, idx, plan, ident)
+        mt, mm, mb = mask_bands
         new_mid, ch = geodesic_compact_step(
             ft, fm, fb, mt, mm, mb, valid,
             op=op, fuse_k=plan.fuse_k, band_h=plan.band_h,
@@ -345,31 +460,11 @@ def _scheduled_reconstruct(fp, mp, plan: ChainPlan, op: str, max_chunks: int,
         flags = jnp.zeros((total, 1), jnp.int32).at[idx].set(ch, mode="drop")
         return x, flags
 
-    def cond(state):
-        _, active, it, *_ = state
-        return jnp.logical_and(jnp.any(active > 0), it < max_chunks)
-
-    def body(state):
-        x, active, it, asum, per_chunk = state
-        count = jnp.sum(active)
-        if use_compact:
-            x, flags = jax.lax.cond(count <= cap, compact_step, full_step,
-                                    x, active)
-        else:
-            x, flags = full_step(x, active)
-        if with_stats:
-            per_chunk = per_chunk.at[it].set(count)
-        return x, _dilate_active(flags, plan), it + 1, asum + count, per_chunk
-
-    init = (
-        fp,
-        jnp.ones((total, 1), jnp.int32),
-        jnp.asarray(0, jnp.int32),
-        jnp.asarray(0, jnp.int32),
-        jnp.zeros((max_chunks if with_stats else 0,), jnp.int32),
+    return _drive_scheduler(
+        plan, fp, full_step=full_step, compact_step=compact_step,
+        gather_const=gather_const, max_chunks=max_chunks,
+        with_stats=with_stats,
     )
-    out, _, it, asum, per_chunk = jax.lax.while_loop(cond, body, init)
-    return out, it, asum, per_chunk
 
 
 def _reconstruct_impl(f, m, op, backend, max_chunks, plan, with_stats=False):
@@ -494,58 +589,81 @@ def qdt_planes(
     acc = jnp.float32 if jnp.issubdtype(f.dtype, jnp.floating) else jnp.int32
 
     total = plan.total_bands
-    cap = plan.compact_capacity
-    use_compact = plan.compact_threshold > 0.0 and cap < total
     ident = ident_for("erode", f.dtype)
 
     fp = _stacked(_pad(f3, plan, ident))
     rp = jnp.zeros(fp.shape, acc)
     dp = jnp.zeros(fp.shape, jnp.int32)
 
-    def full_step(x, r, d, active, base):
-        return qdt_chain_step(
+    def full_step(data, active, base):
+        x, r, d = data
+        x, r, d, ch = qdt_chain_step(
             x, r, d, base, fuse_k=k, band_h=plan.band_h,
             interpret=_INTERPRET, active=active, bands_per_image=plan.n_bands,
         )
+        return (x, r, d), ch
 
-    def compact_step(x, r, d, active, base):
-        idx, valid = _active_indices(active, plan)
+    def compact_step(data, idx, valid, const, base):
+        x, r, d = data
         ft, fm, fb = _gather_bands(x, idx, plan, ident)
         rm = _gather_mid(r, idx, plan)
         dm = _gather_mid(d, idx, plan)
+        # per-slot distance offset: each gathered band carries its own
+        # image's erosion count (sentinel slots clip — dropped anyway).
+        base_slots = jnp.take(base.ravel(), idx, mode="clip")[:, None]
         f2, r2, d2, ch = qdt_compact_step(
-            ft, fm, fb, rm, dm, valid, base,
+            ft, fm, fb, rm, dm, valid, base_slots,
             fuse_k=k, band_h=plan.band_h, interpret=_INTERPRET,
         )
         x = _scatter_mid(x, idx, f2, plan)
         r = _scatter_mid(r, idx, r2, plan)
         d = _scatter_mid(d, idx, d2, plan)
         flags = jnp.zeros((total, 1), jnp.int32).at[idx].set(ch, mode="drop")
-        return x, r, d, flags
+        return (x, r, d), flags
 
-    def cond(state):
-        _, _, _, active, it = state
-        return jnp.logical_and(jnp.any(active > 0), it < max_chunks)
-
-    def body(state):
-        x, r, d, active, it = state
-        base = (it * k).astype(jnp.int32).reshape(1, 1)
-        count = jnp.sum(active)
-        if use_compact:
-            x, r, d, flags = jax.lax.cond(
-                count <= cap, compact_step, full_step, x, r, d, active, base
-            )
-        else:
-            x, r, d, flags = full_step(x, r, d, active, base)
-        return x, r, d, _dilate_active(flags, plan), it + 1
-
-    _, r, d, _, _ = jax.lax.while_loop(
-        cond,
-        body,
-        (fp, rp, dp, jnp.ones((total, 1), jnp.int32), jnp.asarray(0, jnp.int32)),
+    (_, r, d), _, _, _ = _drive_scheduler(
+        plan, (fp, rp, dp), full_step=full_step, compact_step=compact_step,
+        max_chunks=max_chunks,
     )
     n_img = f3.shape[0]
     return (
         _crop(_unstacked(d, n_img), f.shape, was_2d),
         _crop(_unstacked(r, n_img), f.shape, was_2d),
     )
+
+
+# ---------------------------------------------------------------------------
+# serving registry hooks
+# ---------------------------------------------------------------------------
+
+#: Registry hooks for ``repro.serve``: every public kernel op gets a
+#: string name + param schema here, next to its implementation, so
+#: services can be declared as data (``repro.serve.registry`` consumes
+#: this and builds the batched entry points).
+#:
+#: ``pad`` names the absorbing fill for pad-to-bucket shape
+#: canonicalization ("hi" = erosion identity, "lo" = dilation identity)
+#: — exact because an n-fold erosion/dilation is one min/max-filter
+#: over the *original* padded image, and for reconstructions because
+#: padding marker and mask with the identity pins the pad region (the
+#: same contract the kernels' own ``_pad`` uses).  ``pad_safe=False``
+#: ops mix erosion and dilation phases, so no single fill is absorbing
+#: end-to-end; the bucketer gives them exact-shape buckets instead.
+SERVE_OPS = (
+    dict(name="erode", kind="chain", chain_op="erode", pad="hi",
+         params={"s": dict(type="int", required=True, min=1)}),
+    dict(name="dilate", kind="chain", chain_op="dilate", pad="lo",
+         params={"s": dict(type="int", required=True, min=1)}),
+    dict(name="opening", kind="unary_fn", fn=opening, pad_safe=False,
+         params={"s": dict(type="int", required=True, min=1)}),
+    dict(name="closing", kind="unary_fn", fn=closing, pad_safe=False,
+         params={"s": dict(type="int", required=True, min=1)}),
+    dict(name="reconstruct", kind="reconstruct",
+         params={"op": dict(type="str", default="dilate",
+                            choices=("erode", "dilate"))}),
+    dict(name="geodesic", kind="geodesic",
+         params={"n": dict(type="int", required=True, min=1),
+                 "op": dict(type="str", default="erode",
+                            choices=("erode", "dilate"))}),
+    dict(name="qdt", kind="qdt", pad="hi", params={}),
+)

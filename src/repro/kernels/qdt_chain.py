@@ -30,6 +30,10 @@ def _qdt_kernel(
     *, fuse_k: int, band_h: int, acc_dtype, bands_per_image: int,
     pin_halos: bool,
 ):
+    # ``base`` is blocked per band: each band reads the elementary-erosion
+    # count already applied to *its image*, so ragged-converged stacks
+    # keep per-image distance indices (a finished image's counter stops
+    # advancing with the rest of the batch).
     # program_id is not available inside pl.when branches in interpret
     # mode — read it at kernel top level.
     edges = image_edges(pl.program_id(0), bands_per_image) if pin_halos else None
@@ -88,7 +92,10 @@ def qdt_chain_step(
 ):
     """One K-step QDT chunk on pre-padded planes.
 
-    ``base`` is a (1,1) int32 with the number of erosions already applied.
+    ``base`` is an (n_bands, 1) int32 with the number of elementary
+    erosions already applied to each band's image — per *band* so the
+    batched driver can give every stacked image its own distance offset
+    (a (1, 1) array is broadcast for the unbatched callers).
     ``active`` optionally skips converged bands (see module docstring).
     Returns (f', r', d', changed) — changed is (n_bands, 1) int32.
     """
@@ -100,6 +107,9 @@ def qdt_chain_step(
     assert n_bands % bands_per_image == 0
     if active is None:
         active = jnp.ones((n_bands, 1), jnp.int32)
+    if base.shape == (1, 1):
+        base = jnp.broadcast_to(base, (n_bands, 1))
+    assert base.shape == (n_bands, 1)
     rr = band_h // fuse_k
     last_k_block = h // fuse_k - 1
     acc_dtype = jnp.float32 if jnp.issubdtype(f.dtype, jnp.floating) else jnp.int32
@@ -110,7 +120,6 @@ def qdt_chain_step(
     bot_spec = pl.BlockSpec(
         (fuse_k, w), lambda i: (jnp.minimum((i + 1) * rr, last_k_block), 0)
     )
-    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
     flag_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
 
     kern = functools.partial(
@@ -120,7 +129,7 @@ def qdt_chain_step(
     return pl.pallas_call(
         kern,
         grid=(n_bands,),
-        in_specs=[scalar_spec, flag_spec, top_spec, mid_spec, bot_spec,
+        in_specs=[flag_spec, flag_spec, top_spec, mid_spec, bot_spec,
                   mid_spec, mid_spec],
         out_specs=[mid_spec, mid_spec, mid_spec, flag_spec],
         out_shape=[
@@ -150,17 +159,21 @@ def qdt_compact_step(
 
     Shapes mirror ``geodesic_compact_step``: f_mid/r_mid/d_mid
     (C·band_h, W), f_top/f_bot (C·fuse_k, W), valid (C, 1) int32,
-    base (1, 1) int32.  Returns (f', r', d', changed).
+    base (C, 1) int32 — the driver gathers each active band's per-image
+    erosion count into the workspace slot (a (1, 1) array is broadcast).
+    Returns (f', r', d', changed).
     """
     cap_bh, w = f_mid.shape
     assert cap_bh % band_h == 0
     cap = cap_bh // band_h
     acc_dtype = jnp.float32 if jnp.issubdtype(f_mid.dtype, jnp.floating) else jnp.int32
     assert r_mid.dtype == acc_dtype and d_mid.dtype == jnp.int32
+    if base.shape == (1, 1):
+        base = jnp.broadcast_to(base, (cap, 1))
+    assert base.shape == (cap, 1)
 
     halo_spec = pl.BlockSpec((fuse_k, w), lambda i: (i, 0))
     mid_spec = pl.BlockSpec((band_h, w), lambda i: (i, 0))
-    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
     flag_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
 
     kern = functools.partial(
@@ -170,7 +183,7 @@ def qdt_compact_step(
     return pl.pallas_call(
         kern,
         grid=(cap,),
-        in_specs=[scalar_spec, flag_spec, halo_spec, mid_spec, halo_spec,
+        in_specs=[flag_spec, flag_spec, halo_spec, mid_spec, halo_spec,
                   mid_spec, mid_spec],
         out_specs=[mid_spec, mid_spec, mid_spec, flag_spec],
         out_shape=[

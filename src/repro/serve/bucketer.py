@@ -1,0 +1,142 @@
+"""Request queue + shape/dtype bucketer.
+
+Incoming requests are coalesced per *bucket* so the executor can push
+full ``(N, H, W)`` stacks through one compiled program:
+
+* **bucket key** = (op, canonical params, padded (H, W), dtype).  For
+  pad-safe ops the image shape is rounded up to ``pad_quantum``
+  multiples, so a 500×300 and a 512×320 request share one compiled
+  program; pad-unsafe ops get exact-shape buckets (still batched across
+  same-shape requests).
+* **batch canonicalization**: a flushed batch of n requests is padded
+  with sentinel images to the next power of two ≤ ``max_batch``, so the
+  handful of canonical batch shapes reuse compiled programs instead of
+  recompiling per occupancy.  Sentinels are filled with the op's
+  absorbing identity — under the active-band scheduler they converge in
+  one chunk and stop costing band work.
+* **deadline flush**: every queue records its oldest enqueue time; the
+  service launches a bucket when it reaches ``max_batch`` *or* its
+  oldest request has waited ``max_delay_ms`` — a straggler request
+  never waits longer than that for co-batched traffic that may never
+  arrive.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from repro.core import morphology as M
+
+
+def pad_fill(dtype, which: str):
+    """Absorbing fill value: "hi" = erosion identity, "lo" = dilation's
+    (the lattice top/bottom already defined by ``core.morphology``)."""
+    top = which == "hi"
+    return np.asarray(M.lattice_top(dtype) if top else M.lattice_bottom(dtype))
+
+
+def bucket_hw(h: int, w: int, quantum: int) -> tuple[int, int]:
+    """Round a shape up to the bucket grid."""
+    q = max(1, quantum)
+    return (math.ceil(h / q) * q, math.ceil(w / q) * q)
+
+
+def canonical_batch(n: int, max_batch: int) -> int:
+    """Next power of two >= n, capped at max_batch."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, max_batch)
+
+
+class BucketKey(NamedTuple):
+    op: str
+    params: tuple          # canonical (name, value) pairs
+    hw: tuple[int, int]    # bucket (H, W) after canonicalization
+    dtype: str
+
+    def label(self) -> str:
+        """Human/metrics-facing name for this bucket."""
+        p = ",".join(f"{k}={v}" for k, v in self.params if v is not None)
+        core = f"{self.op}({p})" if p else self.op
+        return f"{core}/{self.hw[0]}x{self.hw[1]}/{self.dtype}"
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Per-request handle, fulfilled by the executor's demux."""
+
+    request_id: int
+    op: str
+    t_enqueue: float
+    done: bool = False
+    value: Any = None
+    error: Exception | None = None
+    t_done: float = 0.0
+    _service: Any = dataclasses.field(default=None, repr=False)
+    _bucket_key: Any = dataclasses.field(default=None, repr=False)
+    _queued: bool = dataclasses.field(default=False, repr=False)
+
+    def result(self):
+        """The request's output; drives the service forward if needed."""
+        if not self.done and self._service is not None:
+            self._service._complete(self)
+        if self.error is not None:
+            raise self.error
+        if not self.done:
+            raise RuntimeError(
+                f"request {self.request_id} ({self.op}) not completed — "
+                "call Service.flush() or poll()"
+            )
+        return self.value
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    """A submitted request staged in a bucket queue."""
+
+    ticket: Ticket
+    images: tuple           # original user images (np, unpadded)
+    inputs: tuple           # canonical inputs from OpSpec.prepare (unpadded)
+    shape: tuple[int, int]  # original (H, W) for the demux crop
+
+
+class BucketQueue:
+    """FIFO queues per bucket key with deadline accounting."""
+
+    def __init__(self, max_batch: int, max_delay_s: float):
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self._queues: dict[BucketKey, list[PendingRequest]] = {}
+
+    def add(self, key: BucketKey, req: PendingRequest) -> bool:
+        """Enqueue; True when the bucket just reached ``max_batch``."""
+        q = self._queues.setdefault(key, [])
+        q.append(req)
+        return len(q) >= self.max_batch
+
+    def pop(self, key: BucketKey) -> list[PendingRequest]:
+        """Dequeue up to ``max_batch`` oldest requests of a bucket."""
+        q = self._queues.get(key, [])
+        batch, rest = q[: self.max_batch], q[self.max_batch :]
+        if rest:
+            self._queues[key] = rest
+        else:
+            self._queues.pop(key, None)
+        return batch
+
+    def due(self, now: float) -> list[BucketKey]:
+        """Buckets whose oldest request has exceeded the flush deadline."""
+        return [
+            key for key, q in self._queues.items()
+            if q and now - q[0].ticket.t_enqueue >= self.max_delay_s
+        ]
+
+    def keys(self) -> list[BucketKey]:
+        return [k for k, q in self._queues.items() if q]
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())

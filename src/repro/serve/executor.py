@@ -1,0 +1,146 @@
+"""Async double-buffered executor: overlap host staging with device
+compute, demux per-request results.
+
+JAX dispatch is asynchronous — calling a compiled program enqueues the
+device work and returns device buffers immediately — so the pipeline
+falls out of bounded in-flight tracking: the service stages (pads,
+stacks, uploads) the *next* batch on the host while the device crunches
+the current one, and the executor only blocks when ``depth`` batches
+are already in flight (``depth=2`` is classic double buffering).
+
+Draining a batch demuxes it: each real request slot is cropped back to
+its original (H, W) (dropping the pad-to-bucket canonicalization),
+``OpSpec.finalize`` runs per request (e.g. DOME's ``f - hmax``), the
+ticket is fulfilled, and sentinel slots (batch padding up to the
+canonical size) are discarded.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.bucketer import BucketKey, PendingRequest
+from repro.serve.metrics import ServeMetrics
+
+
+class InflightBatch(NamedTuple):
+    outputs: tuple           # device buffers, one per OpSpec output
+    requests: list           # real PendingRequests (sentinel slots excluded)
+    spec: object             # OpSpec
+    params: tuple
+    key: BucketKey
+    n_slots: int
+    t_dispatch: float
+
+
+class Executor:
+    def __init__(self, metrics: ServeMetrics, depth: int = 2,
+                 clock=time.monotonic):
+        if depth < 1:
+            raise ValueError("pipeline depth must be >= 1")
+        self.depth = depth
+        self.metrics = metrics
+        self.clock = clock
+        self._inflight: collections.deque[InflightBatch] = collections.deque()
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    def dispatch(self, entry, spec, key: BucketKey, params: tuple,
+                 requests: list[PendingRequest], n_slots: int,
+                 stacked_inputs: tuple) -> None:
+        """Launch one batch (async) and retire the oldest if the
+        pipeline is full."""
+        try:
+            out = entry.fn(*stacked_inputs)
+        except Exception as exc:
+            # trace/compile failure: the requests are already out of the
+            # queue, so resolve their tickets with the error instead of
+            # stranding them, then surface it to the caller.
+            self._fail_batch(requests, exc)
+            raise
+        outputs = out if isinstance(out, tuple) else (out,)
+        self._inflight.append(InflightBatch(
+            outputs=outputs, requests=requests, spec=spec, params=params,
+            key=key, n_slots=n_slots, t_dispatch=self.clock(),
+        ))
+        while len(self._inflight) > self.depth:
+            self.drain_one()
+
+    def _fail_batch(self, requests, exc: Exception) -> None:
+        now = self.clock()
+        for req in requests:
+            req.ticket.error = exc
+            req.ticket.done = True
+            req.ticket.t_done = now
+
+    def drain_one(self) -> bool:
+        """Block on the oldest in-flight batch and demux it."""
+        if not self._inflight:
+            return False
+        batch = self._inflight.popleft()
+        try:
+            jax.block_until_ready(batch.outputs)
+        except Exception as exc:  # async execution error surfaces here
+            self._fail_batch(batch.requests, exc)
+            now = self.clock()
+            self.metrics.record_batch(
+                batch.key.label(),
+                n_real=len(batch.requests),
+                n_slots=batch.n_slots,
+                pixels=sum(h * w for h, w in
+                           (r.shape for r in batch.requests)),
+                t_dispatch=batch.t_dispatch,
+                t_done=now,
+                latencies_s=[now - r.ticket.t_enqueue
+                             for r in batch.requests],
+                n_errors=len(batch.requests),
+            )
+            return True
+        now = self.clock()
+
+        latencies = []
+        pixels = 0
+        n_errors = 0
+        for slot, req in enumerate(batch.requests):
+            h, w = req.shape
+            cropped = tuple(o[slot, :h, :w] for o in batch.outputs)
+            try:
+                if batch.spec.finalize is not None:
+                    cropped = tuple(
+                        batch.spec.finalize(c, tuple(map(jnp.asarray,
+                                                         req.images)),
+                                            dict(batch.params))
+                        for c in cropped
+                    )
+                req.ticket.value = (
+                    cropped[0] if batch.spec.n_outputs == 1 else cropped
+                )
+            except Exception as exc:  # surface per-request, keep serving
+                req.ticket.error = exc
+                n_errors += 1
+            req.ticket.done = True
+            req.ticket.t_done = now
+            latencies.append(now - req.ticket.t_enqueue)
+            pixels += h * w
+
+        self.metrics.record_batch(
+            batch.key.label(),
+            n_real=len(batch.requests),
+            n_slots=batch.n_slots,
+            pixels=pixels,
+            t_dispatch=batch.t_dispatch,
+            t_done=now,
+            latencies_s=latencies,
+            n_errors=n_errors,
+        )
+        return True
+
+    def drain_all(self) -> None:
+        while self.drain_one():
+            pass

@@ -1,0 +1,166 @@
+"""Serving metrics: per-bucket latency percentiles, batch occupancy,
+throughput (FPS / MPx-per-s) and cache statistics.
+
+Throughput is measured over the *wall span* of each bucket (first
+dispatch → last drain), not the sum of per-batch intervals — with the
+double-buffered executor those intervals overlap, and summing them
+would understate FPS exactly when the pipelining works.  Latency
+percentiles are computed over a bounded window of the most recent
+``LATENCY_WINDOW`` requests per bucket, so a long-running service keeps
+O(1) memory per bucket while ``requests`` counts the full history.
+
+``bench_rows()`` / ``as_bench_json()`` emit the same row contract as
+``benchmarks/run.py`` (``name,us_per_call,derived`` rows and the
+``--json`` name → us_per_call mapping), so serving throughput lands in
+the same machine-readable perf trajectory as the kernel benchmarks.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+#: Most recent per-bucket request latencies retained for percentiles.
+LATENCY_WINDOW = 4096
+
+
+@dataclasses.dataclass
+class _BucketStats:
+    requests: int = 0
+    batches: int = 0
+    slots: int = 0
+    pixels: int = 0
+    errors: int = 0
+    t_first: float | None = None   # earliest dispatch seen
+    t_last: float = 0.0            # latest drain seen
+    latencies_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW)
+    )
+
+    @property
+    def occupancy(self) -> float:
+        return self.requests / self.slots if self.slots else 0.0
+
+    @property
+    def span_s(self) -> float:
+        if self.t_first is None:
+            return 0.0
+        return max(0.0, self.t_last - self.t_first)
+
+
+class ServeMetrics:
+    def __init__(self):
+        self._buckets: dict[str, _BucketStats] = {}
+
+    def record_batch(
+        self,
+        label: str,
+        *,
+        n_real: int,
+        n_slots: int,
+        pixels: int,
+        t_dispatch: float,
+        t_done: float,
+        latencies_s,
+        n_errors: int = 0,
+    ) -> None:
+        b = self._buckets.setdefault(label, _BucketStats())
+        b.requests += n_real
+        b.batches += 1
+        b.slots += n_slots
+        b.pixels += pixels
+        b.errors += n_errors
+        b.t_first = t_dispatch if b.t_first is None else min(b.t_first,
+                                                             t_dispatch)
+        b.t_last = max(b.t_last, t_done)
+        b.latencies_s.extend(float(t) for t in latencies_s)
+
+    @staticmethod
+    def _percentiles(lat_s) -> dict:
+        if not lat_s:
+            return {"p50_ms": 0.0, "p90_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+        a = np.asarray(lat_s) * 1e3
+        return {
+            "p50_ms": float(np.percentile(a, 50)),
+            "p90_ms": float(np.percentile(a, 90)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "mean_ms": float(a.mean()),
+        }
+
+    @staticmethod
+    def _rates(requests: int, pixels: int, span_s: float) -> tuple:
+        if span_s <= 0.0:
+            return 0.0, 0.0
+        return requests / span_s, pixels / span_s / 1e6
+
+    def summary(self, cache_stats: dict | None = None) -> dict:
+        """Full metrics tree (buckets + totals + cache)."""
+        buckets = {}
+        tot = _BucketStats()
+        all_lat: list = []
+        for label, b in sorted(self._buckets.items()):
+            fps, mpx = self._rates(b.requests, b.pixels, b.span_s)
+            buckets[label] = {
+                "requests": b.requests,
+                "batches": b.batches,
+                "errors": b.errors,
+                "batch_occupancy": b.occupancy,
+                "latency": self._percentiles(b.latencies_s),
+                "fps": fps,
+                "mpx_per_s": mpx,
+            }
+            tot.requests += b.requests
+            tot.batches += b.batches
+            tot.slots += b.slots
+            tot.pixels += b.pixels
+            tot.errors += b.errors
+            if b.t_first is not None:
+                tot.t_first = (b.t_first if tot.t_first is None
+                               else min(tot.t_first, b.t_first))
+                tot.t_last = max(tot.t_last, b.t_last)
+            all_lat.extend(b.latencies_s)
+        fps, mpx = self._rates(tot.requests, tot.pixels, tot.span_s)
+        out = {
+            "buckets": buckets,
+            "totals": {
+                "requests": tot.requests,
+                "batches": tot.batches,
+                "errors": tot.errors,
+                "batch_occupancy": tot.occupancy,
+                "latency": self._percentiles(all_lat),
+                "fps": fps,
+                "mpx_per_s": mpx,
+            },
+        }
+        if cache_stats is not None:
+            out["cache"] = cache_stats
+        return out
+
+    def bench_rows(self, cache_stats: dict | None = None) -> list[dict]:
+        """Rows in the ``benchmarks.common.emit`` contract."""
+        rows = []
+        for label, b in sorted(self._buckets.items()):
+            if not b.requests:
+                continue
+            pct = self._percentiles(b.latencies_s)
+            fps, mpx = self._rates(b.requests, b.pixels, b.span_s)
+            derived = (
+                f"p50={pct['p50_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms "
+                f"occ={b.occupancy:.2f} fps={fps:.1f} mpx/s={mpx:.1f}"
+            )
+            if b.errors:
+                derived += f" errors={b.errors}"
+            if cache_stats is not None:
+                derived += f" cache_hit={cache_stats['hit_rate']:.2f}"
+            rows.append({
+                "name": f"serve/{label}",
+                "us_per_call": pct["mean_ms"] * 1e3,
+                "derived": derived,
+            })
+        return rows
+
+    def as_bench_json(self, cache_stats: dict | None = None) -> dict:
+        """name → us_per_call, the ``benchmarks/run.py --json`` schema."""
+        return {r["name"]: r["us_per_call"]
+                for r in self.bench_rows(cache_stats)}

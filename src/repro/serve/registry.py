@@ -1,0 +1,282 @@
+"""Operator registry: every servable op declared as data.
+
+The implementations stay where they live — ``core.operators`` and
+``kernels.ops`` each export a ``SERVE_OPS`` hook tuple (name + param
+schema next to the code) and this module translates the hooks into
+:class:`OpSpec` entries the service pipeline understands.  A service is
+then *declared* as data: ``[("hmax", {"h": 40}), ("erode", {"s": 16})]``.
+
+Each :class:`OpSpec` describes the three pipeline stages:
+
+``prepare(images, params)``
+    per-request, on the *unpadded* image — marker derivation happens
+    here so per-image reductions (``hfill_marker``'s interior max, …)
+    never see bucket padding.
+``run(inputs, params, backend, plan)``
+    the batched core compiled once per (bucket, params, backend) by the
+    serve cache; kernel-backed ops receive an explicit
+    :class:`~repro.core.chain.ChainPlan` so the compiled-plan cache can
+    report the schedule it embeds.
+``finalize(out, images, params)``
+    per-request, after the demux crop (e.g. DOME's ``f - hmax``).
+
+``pad_fills(params)`` names the absorbing fill ("hi"/"lo") used for
+pad-to-bucket canonicalization of each canonical input; ops with
+``pad_safe=False`` are bucketed by exact shape instead (see the hooks'
+docstrings for the exactness argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+from repro.core import operators as OPS
+from repro.core.chain import plan_chain
+from repro.kernels import ops as K
+
+_TYPES = {"int": int, "float": float, "str": str}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Schema for one operator parameter (declared as data in the hooks)."""
+
+    type: str = "float"
+    default: Any = None
+    required: bool = False
+    choices: tuple | None = None
+    min: Any = None
+
+    def coerce(self, op: str, name: str, value):
+        try:
+            value = _TYPES[self.type](value)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"op {op!r}: param {name!r} expects {self.type}, got {value!r}"
+            ) from None
+        if self.choices is not None and value not in self.choices:
+            raise ValueError(
+                f"op {op!r}: param {name!r} must be one of {self.choices}, "
+                f"got {value!r}"
+            )
+        if self.min is not None and value < self.min:
+            raise ValueError(
+                f"op {op!r}: param {name!r} must be >= {self.min}, got {value!r}"
+            )
+        return value
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """A servable operator: string name, param schema, pipeline stages."""
+
+    name: str
+    params: Mapping[str, ParamSpec]
+    run: Callable
+    arity: int = 1           # image inputs per request (user-facing)
+    n_inputs: int | None = None  # canonical inputs after prepare (None=arity)
+    n_outputs: int = 1
+    pad_safe: bool = True
+    pad_fills: Callable | None = None      # params dict -> ("hi"|"lo", ...)
+    prepare: Callable | None = None        # None = identity
+    finalize: Callable | None = None
+    plan_builder: Callable | None = None   # (n, h, w, dtype, params) -> plan
+
+    def canonical_params(self, params: Mapping | None) -> tuple:
+        """Validate + normalize params into a sorted hashable tuple
+        (the form bucket and cache keys embed)."""
+        given = dict(params or {})
+        out = []
+        for name in sorted(self.params):
+            spec = self.params[name]
+            if name in given:
+                val = spec.coerce(self.name, name, given.pop(name))
+            elif spec.required:
+                raise ValueError(
+                    f"op {self.name!r}: missing required param {name!r}"
+                )
+            else:
+                val = spec.default
+            out.append((name, val))
+        if given:
+            raise ValueError(
+                f"op {self.name!r}: unknown params {sorted(given)} "
+                f"(schema: {sorted(self.params)})"
+            )
+        return tuple(out)
+
+    def prepare_inputs(self, images: tuple, params: tuple) -> tuple:
+        if self.prepare is None:
+            return images
+        return self.prepare(images, dict(params))
+
+
+def _specs(op_name: str, schema: Mapping) -> dict[str, ParamSpec]:
+    return {name: ParamSpec(**field) for name, field in schema.items()}
+
+
+# ---------------------------------------------------------------------------
+# hook translation (one builder per hook kind)
+# ---------------------------------------------------------------------------
+
+
+def _convergent_plan(resident):
+    def build(n, h, w, dtype, params):
+        return plan_chain(h, w, dtype, None, n_images_resident=resident,
+                          n_images=n, convergent=True)
+    return build
+
+
+def _from_chain(hook) -> OpSpec:
+    chain_op = hook["chain_op"]
+
+    def run(inputs, params, backend, plan):
+        return K.morph_chain(inputs[0], dict(params)["s"], chain_op, backend,
+                             plan=plan)
+
+    def plan_builder(n, h, w, dtype, params):
+        return plan_chain(h, w, dtype, params["s"], n_images=n)
+
+    return OpSpec(
+        name=hook["name"], params=_specs(hook["name"], hook["params"]),
+        run=run, pad_fills=lambda p: (hook["pad"],),
+        plan_builder=plan_builder,
+    )
+
+
+def _from_unary_fn(hook) -> OpSpec:
+    fn = hook["fn"]
+
+    def run(inputs, params, backend, plan):
+        return fn(inputs[0], dict(params)["s"], backend)
+
+    return OpSpec(
+        name=hook["name"], params=_specs(hook["name"], hook["params"]),
+        run=run, pad_safe=hook.get("pad_safe", True),
+    )
+
+
+def _from_reconstruct(hook) -> OpSpec:
+    def run(inputs, params, backend, plan):
+        return K.reconstruct(inputs[0], inputs[1], dict(params)["op"],
+                             backend, plan=plan)
+
+    def pad_fills(params):
+        which = "hi" if params["op"] == "erode" else "lo"
+        return (which, which)
+
+    return OpSpec(
+        name=hook["name"], params=_specs(hook["name"], hook["params"]),
+        run=run, arity=2, pad_fills=pad_fills,
+        plan_builder=_convergent_plan(2),
+    )
+
+
+def _from_geodesic(hook) -> OpSpec:
+    def run(inputs, params, backend, plan):
+        p = dict(params)
+        return K.geodesic_chain(inputs[0], inputs[1], p["n"], p["op"],
+                                backend, plan=plan)
+
+    def pad_fills(params):
+        which = "hi" if params["op"] == "erode" else "lo"
+        return (which, which)
+
+    def plan_builder(n, h, w, dtype, params):
+        return plan_chain(h, w, dtype, params["n"], n_images_resident=2,
+                          n_images=n)
+
+    return OpSpec(
+        name=hook["name"], params=_specs(hook["name"], hook["params"]),
+        run=run, arity=2, pad_fills=pad_fills, plan_builder=plan_builder,
+    )
+
+
+def _from_qdt(hook) -> OpSpec:
+    def run(inputs, params, backend, plan):
+        return K.qdt_planes(inputs[0], backend, plan=plan)
+
+    return OpSpec(
+        name=hook["name"], params=_specs(hook["name"], hook["params"]),
+        run=run, n_outputs=2, pad_fills=lambda p: (hook["pad"],),
+        plan_builder=_convergent_plan(3),
+    )
+
+
+def _from_marker_reconstruct(hook) -> OpSpec:
+    direction = hook["direction"]
+    marker = hook["marker"]
+    residual = hook.get("residual", False)
+
+    def prepare(images, params):
+        return (marker(images[0], params), images[0])
+
+    def run(inputs, params, backend, plan):
+        return K.reconstruct(inputs[0], inputs[1], direction, backend,
+                             plan=plan)
+
+    finalize = None
+    if residual:
+        def finalize(out, images, params):
+            return images[0] - out
+
+    which = "hi" if direction == "erode" else "lo"
+    return OpSpec(
+        name=hook["name"], params=_specs(hook["name"], hook["params"]),
+        run=run, prepare=prepare, finalize=finalize, n_inputs=2,
+        pad_fills=lambda p, _w=which: (_w, _w),
+        plan_builder=_convergent_plan(2),
+    )
+
+
+def _from_whole_image(hook) -> OpSpec:
+    fn = hook["fn"]
+
+    def run(inputs, params, backend, plan):
+        return fn(inputs[0], dict(params))
+
+    return OpSpec(
+        name=hook["name"], params=_specs(hook["name"], hook["params"]),
+        run=run, pad_safe=False,
+    )
+
+
+_BUILDERS = {
+    "chain": _from_chain,
+    "unary_fn": _from_unary_fn,
+    "reconstruct": _from_reconstruct,
+    "geodesic": _from_geodesic,
+    "qdt": _from_qdt,
+    "marker_reconstruct": _from_marker_reconstruct,
+    "whole_image": _from_whole_image,
+}
+
+_REGISTRY: dict[str, OpSpec] = {}
+
+
+def register(spec: OpSpec) -> OpSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"op {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> OpSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown op {name!r}; registered: {', '.join(names())}"
+        ) from None
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _install_hooks():
+    for hook in (*K.SERVE_OPS, *OPS.SERVE_OPS):
+        register(_BUILDERS[hook["kind"]](hook))
+
+
+_install_hooks()

@@ -1,0 +1,244 @@
+"""The serving front-end: submit → bucket → compile-or-hit → execute.
+
+``Service`` ties the pieces together: the :mod:`registry` validates ops
+and params, the :mod:`bucketer` coalesces requests into shape/dtype
+buckets, the :mod:`cache` maps (op, params, bucket shape, dtype,
+backend) to compiled programs + their :class:`ChainPlan`, and the
+:mod:`executor` runs the double-buffered pipeline and demuxes results.
+
+The service is single-threaded and cooperatively scheduled: ``submit``
+launches a bucket the moment it fills, and every ``submit``/``poll``
+also flushes buckets whose oldest request has waited ``max_delay_ms``.
+Callers that want strict deadline behaviour between submissions pump
+``poll()`` themselves (there is no background thread — see the ROADMAP
+follow-up); ``flush()`` force-launches everything and drains the
+pipeline, and ``Ticket.result()`` drives whatever its request still
+needs.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import registry
+from repro.serve.bucketer import (BucketKey, BucketQueue, PendingRequest,
+                                  Ticket, bucket_hw, canonical_batch,
+                                  pad_fill)
+from repro.serve.cache import CacheEntry, CompiledProgramCache
+from repro.serve.executor import Executor
+from repro.serve.metrics import ServeMetrics
+
+
+class Service:
+    def __init__(
+        self,
+        *,
+        backend: str = "pallas",
+        max_batch: int = 8,
+        max_delay_ms: float = 5.0,
+        pad_quantum: int = 64,
+        cache_capacity: int = 64,
+        pipeline_depth: int = 2,
+        clock=time.monotonic,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.backend = backend
+        self.max_batch = max_batch
+        self.pad_quantum = pad_quantum
+        self.clock = clock
+        self.metrics = ServeMetrics()
+        self.cache = CompiledProgramCache(cache_capacity)
+        self.executor = Executor(self.metrics, depth=pipeline_depth,
+                                 clock=clock)
+        self._queue = BucketQueue(max_batch, max_delay_ms / 1e3)
+        self._next_id = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, op: str, *images, params=None) -> Ticket:
+        """Enqueue one request; returns a :class:`Ticket` whose
+        ``result()`` drives the pipeline as needed."""
+        spec = registry.get(op)
+        if len(images) != spec.arity:
+            raise ValueError(
+                f"op {op!r} takes {spec.arity} image(s), got {len(images)}"
+            )
+        imgs = tuple(np.asarray(im) for im in images)
+        for im in imgs:
+            if im.ndim != 2:
+                raise ValueError(
+                    f"op {op!r}: expected 2-D images, got shape {im.shape}"
+                )
+            if im.shape != imgs[0].shape or im.dtype != imgs[0].dtype:
+                raise ValueError(
+                    f"op {op!r}: all inputs must share shape/dtype; got "
+                    f"{[(i.shape, str(i.dtype)) for i in imgs]}"
+                )
+        canon = spec.canonical_params(params)
+
+        ticket = Ticket(request_id=self._next_id, op=op,
+                        t_enqueue=self.clock(), _service=self)
+        self._next_id += 1
+        req = PendingRequest(
+            ticket=ticket, images=imgs,
+            inputs=spec.prepare_inputs(imgs, canon), shape=imgs[0].shape,
+        )
+        key = self._bucket_for(spec, op, canon, imgs[0].shape,
+                               imgs[0].dtype)
+        ticket._bucket_key = key
+        ticket._queued = True
+        if self._queue.add(key, req):
+            self._launch(key)
+        self.poll()
+        return ticket
+
+    def poll(self) -> None:
+        """Launch buckets whose oldest request exceeded max_delay_ms."""
+        for key in self._queue.due(self.clock()):
+            self._launch(key)
+
+    def flush(self) -> None:
+        """Launch every queued bucket and drain the whole pipeline."""
+        while True:
+            keys = self._queue.keys()
+            if not keys:
+                break
+            for key in keys:
+                self._launch(key)
+        self.executor.drain_all()
+
+    def _complete(self, ticket: Ticket) -> None:
+        """Drive the pipeline until ``ticket`` resolves (Ticket.result)."""
+        if ticket._queued:
+            self._launch(ticket._bucket_key)
+        while not ticket.done and self.executor.drain_one():
+            pass
+
+    # -- bucket launch -----------------------------------------------------
+
+    def _launch(self, key: BucketKey) -> None:
+        requests = self._queue.pop(key)
+        if not requests:
+            return
+        for req in requests:
+            req.ticket._queued = False
+        spec = registry.get(key.op)
+        n_slots = canonical_batch(len(requests), self.max_batch)
+        try:
+            entry = self.cache.get(
+                self._cache_key(key, n_slots),
+                functools.partial(self._build, spec, key, n_slots),
+            )
+            stacked = self._stage(spec, key, requests, n_slots)
+        except Exception as exc:
+            # the requests are already out of the queue: resolve their
+            # tickets with the error instead of stranding them (the
+            # dispatch path inside the executor does the same).
+            self.executor._fail_batch(requests, exc)
+            raise
+        self.executor.dispatch(entry, spec, key, key.params, requests,
+                               n_slots, stacked)
+
+    def _bucket_for(self, spec, op: str, canon: tuple, shape,
+                    dtype) -> BucketKey:
+        """The one place (submit + warmup) bucket keys are derived."""
+        h, w = shape
+        return BucketKey(
+            op=op, params=canon,
+            hw=bucket_hw(h, w, self.pad_quantum) if spec.pad_safe else (h, w),
+            dtype=str(np.dtype(dtype)),
+        )
+
+    def _cache_key(self, key: BucketKey, n_slots: int) -> tuple:
+        return (key.op, key.params, (n_slots, *key.hw), key.dtype,
+                self.backend)
+
+    def _build(self, spec, key: BucketKey, n_slots: int) -> CacheEntry:
+        h, w = key.hw
+        plan = None
+        if self.backend == "pallas" and spec.plan_builder is not None:
+            plan = spec.plan_builder(n_slots, h, w, np.dtype(key.dtype),
+                                     dict(key.params))
+
+        def call(*inputs):
+            return spec.run(inputs, key.params, self.backend, plan)
+
+        return CacheEntry(fn=jax.jit(call), plan=plan,
+                          key=self._cache_key(key, n_slots))
+
+    def _stage(self, spec, key: BucketKey, requests, n_slots: int) -> tuple:
+        """Host staging: pad each canonical input to the bucket shape and
+        stack; sentinel slots keep the absorbing fill (they converge in
+        one chunk under the active-band scheduler)."""
+        h, w = key.hw
+        dtype = np.dtype(key.dtype)
+        n_inputs = spec.n_inputs or spec.arity
+        fills = (spec.pad_fills(dict(key.params)) if spec.pad_fills
+                 else ("hi",) * n_inputs)
+        stacked = []
+        for j in range(n_inputs):
+            buf = np.full((n_slots, h, w), pad_fill(dtype, fills[j]), dtype)
+            for i, req in enumerate(requests):
+                rh, rw = req.shape
+                buf[i, :rh, :rw] = np.asarray(req.inputs[j])
+            stacked.append(jnp.asarray(buf))
+        return tuple(stacked)
+
+    # -- warm-up + introspection ------------------------------------------
+
+    def warmup(self, entries) -> None:
+        """Prefill the compiled-program cache.
+
+        ``entries`` is an iterable of dicts with keys ``op``, ``shape``
+        (H, W), ``dtype`` and optionally ``params`` / ``batch`` (defaults
+        to ``max_batch``).  Each entry is compiled *and* executed once on
+        a sentinel-only stack so first real traffic pays neither trace
+        nor compile time; warm builds are excluded from hit/miss stats.
+        """
+        for e in entries:
+            spec = registry.get(e["op"])
+            canon = spec.canonical_params(e.get("params"))
+            key = self._bucket_for(spec, e["op"], canon, e["shape"],
+                                   e["dtype"])
+            n_slots = canonical_batch(e.get("batch", self.max_batch),
+                                      self.max_batch)
+            cache_key = self._cache_key(key, n_slots)
+            if cache_key in self.cache:
+                continue  # duplicate entry: don't re-execute the program
+            entry = self.cache.warm(
+                cache_key,
+                functools.partial(self._build, spec, key, n_slots),
+            )
+            stacked = self._stage(spec, key, [], n_slots)
+            jax.block_until_ready(entry.fn(*stacked))
+
+    def stats(self) -> dict:
+        """Metrics summary (buckets/totals/cache), JSON-serializable."""
+        return self.metrics.summary(self.cache.stats())
+
+    def bench_rows(self) -> list[dict]:
+        """Rows in the benchmarks ``name,us_per_call,derived`` contract."""
+        return self.metrics.bench_rows(self.cache.stats())
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+
+def serve_stream(service: Service, requests) -> list:
+    """Convenience driver: submit ``(op, images, params)`` triples (or
+    ``(op, image)`` pairs), flush, and return results in order."""
+    tickets = []
+    for r in requests:
+        op, rest = r[0], r[1:]
+        params = rest[-1] if rest and isinstance(rest[-1], dict) else None
+        images = rest[:-1] if params is not None else rest
+        images = images[0] if len(images) == 1 and isinstance(
+            images[0], (tuple, list)) else images
+        tickets.append(service.submit(op, *images, params=params))
+    service.flush()
+    return [t.result() for t in tickets]

@@ -242,6 +242,47 @@ def test_batched_qdt(rng):
         np.testing.assert_array_equal(np.asarray(r[i]), np.asarray(rw))
 
 
+def test_batched_qdt_ragged_convergence(rng):
+    """Per-image distance offsets: a trivially-flat image (converged in
+    one chunk), a deep-structure image (many chunks) and a busy one
+    stacked together must each match their solo qdt_raw exactly — the
+    d-plane index is per-image, not the global chunk counter."""
+    H, W = 160, 96
+    flat = np.zeros((H, W), np.uint8)
+    deep = np.zeros((H, W), np.uint8)
+    deep[8:152, 8:88] = 255  # large object: erosion iterates longest
+    busy = rng.integers(0, 255, (H, W)).astype(np.uint8)
+    fb = jnp.asarray(np.stack([flat, deep, busy]))
+    d, r = ops.qdt_planes(fb, backend="pallas")
+    for i in range(3):
+        dw, rw = OPS.qdt_raw(fb[i])
+        np.testing.assert_array_equal(np.asarray(d[i]), np.asarray(dw))
+        np.testing.assert_array_equal(np.asarray(r[i]), np.asarray(rw))
+
+
+def test_compaction_mask_cache_exact():
+    """Wavefront confined to one band for many chunks: the compact
+    workspace's mask gather is reused between chunks (the shared
+    driver's gather_const cache hits while the active set is static);
+    the output must stay bit-exact vs the oracle."""
+    H, W = 128, 256
+    mask = np.zeros((H, W), np.uint8)
+    rows = list(range(2, 28, 4))
+    for row in rows:  # serpentine corridor inside band 0 (rows 0..31)
+        mask[row : row + 2, 2 : W - 2] = 200
+    for j, row in enumerate(rows[:-1]):  # alternating end links
+        col = W - 4 if j % 2 == 0 else 2
+        mask[row : row + 6, col : col + 2] = 200
+    marker = np.zeros((H, W), np.uint8)
+    marker[2, 4] = 200
+    marker = np.minimum(marker, mask)
+    out, stats = ops.reconstruct_with_stats(
+        jnp.asarray(marker), jnp.asarray(mask), "dilate", "pallas")
+    want = M.dilate_reconstruct(jnp.asarray(marker), jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    assert int(stats.chunks) > 8  # the in-band iteration actually ran long
+
+
 def test_operators_pallas_backend(rng):
     f = jnp.asarray(rng.integers(0, 255, (96, 96)).astype(np.uint8))
     np.testing.assert_array_equal(
