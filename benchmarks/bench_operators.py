@@ -16,6 +16,7 @@ from benchmarks.common import timeit, timeit_host
 from repro.baselines import queue_reconstruction as qr
 from repro.core import morphology as M
 from repro.core import operators as OPS
+from repro.core.chain import plan_chain
 from repro.data.images import basins, blobs, border_objects
 from repro.kernels import ops as K
 
@@ -87,6 +88,36 @@ def run(quick: bool = True):
           lambda: K.reconstruct(sj, smj, "dilate", "pallas"))
     rows[-1]["derived"] += (f" chunks={int(stats.chunks)}"
                             f" active_frac={frac:.2f}")
+
+    # sparse *vertical* wavefront: the worst case for row-band
+    # scheduling (every full-width band stays active while its slice of
+    # the corridor converges) and the showcase for 2-D tiling — the
+    # derived column compares tile-executions between the auto-tiled
+    # plan and a row-only plan on the same input (row bands normalized
+    # to tile-equivalents: one band spans n_tiles tiles of area).
+    vsize = 640 if quick else 1024  # >= 5 tile columns so skipping shows
+    vcol = vsize // 2 + vsize // 16  # inside one tile column
+    vmask = np.zeros((vsize, vsize), np.uint8)
+    vmask[8 : vsize - 8, vcol : vcol + 16] = 200
+    vsparse = np.zeros((vsize, vsize), np.uint8)
+    vsparse[8, vcol + 2] = 200
+    vj, vmj = jnp.asarray(np.minimum(vsparse, vmask)), jnp.asarray(vmask)
+    plan_2d = plan_chain(vsize, vsize, np.uint8, None, n_images_resident=2,
+                         convergent=True)
+    plan_1d = plan_chain(vsize, vsize, np.uint8, None, n_images_resident=2,
+                         convergent=True, tile_w=0)
+    _, st2 = jax.block_until_ready(K.reconstruct_with_stats(
+        vj, vmj, "dilate", "pallas", plan=plan_2d))
+    _, st1 = jax.block_until_ready(K.reconstruct_with_stats(
+        vj, vmj, "dilate", "pallas", plan=plan_1d))
+    bench(f"RECON_VWAVE_{vsize}v_tiled_pallas",
+          lambda: K.reconstruct(vj, vmj, "dilate", "pallas", plan=plan_2d))
+    tiles_2d = int(st2.active_band_sum)
+    tiles_1d = int(st1.active_band_sum) * plan_2d.n_tiles
+    rows[-1]["derived"] += (
+        f" tiles_2d={tiles_2d} tiles_row={tiles_1d}"
+        f" skip={tiles_1d / max(1, tiles_2d):.2f}x"
+        f" grid={plan_2d.total_bands}x{plan_2d.n_tiles}")
 
     # batched front-end: one (N, H, W) stack through the fused kernels
     n_batch = 4

@@ -6,7 +6,9 @@
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
 With ``--json OUTDIR`` additionally writes one ``BENCH_<module>.json``
 per module mapping row name → us_per_call, so the perf trajectory is
-machine-readable across PRs.
+machine-readable across PRs.  The schema (including the serve suite's
+metrics fields) and how to read the scheduler statistics are documented
+in ``docs/BENCHMARKS.md``.
 
 Modules:
   chain      paper Fig. 7/8 + Table 4 (chain length × dtype, speedups,

@@ -21,19 +21,30 @@ chunk — or whose vertical neighbours changed — need to be requeued.  The
 policy fields below control that scheduler:
 
 ``requeue_halo``
-    how many neighbouring bands to re-activate around a changed band.
-    1 is exact for ``fuse_k <= band_h`` (influence propagates at most
-    ``fuse_k`` rows per chunk, which cannot cross a full band).
+    how many neighbouring tiles to re-activate around a changed tile
+    (per axis).  1 is exact for ``fuse_k <= min(band_h, tile_w)``
+    (influence propagates at most ``fuse_k`` pixels in Chebyshev
+    distance per chunk, which cannot cross a full tile).
+``tile_w``
+    column-tile width.  0 (the default) keeps full-width row bands —
+    the paper's Alg. 4 granularity.  A positive ``tile_w`` splits each
+    band into ``width_pad / tile_w`` column tiles, making the activity
+    grid 2-D (``total_bands × n_tiles``) so a narrow *vertical*
+    wavefront no longer re-processes full-width bands.
 ``compact_threshold``
     when the active fraction drops below this, the driver gathers the
-    active bands into a dense workspace and launches a smaller grid
+    active tiles into a dense workspace and launches a smaller grid
     (the TPU analogue of the paper's work queue).  0 disables
     compaction.
 
 For convergent plans the planner also *shrinks* the band height toward
-``CONVERGENT_TARGET_BANDS`` bands per image: band-level requeueing is
-only as fine-grained as the band, so a VMEM-maximal band (often the
-whole image) would leave nothing to skip.
+``CONVERGENT_TARGET_BANDS`` bands per image and splits the width into
+column tiles when it is at least two lane-groups wide: tile-level
+requeueing is only as fine-grained as the tile, so a VMEM-maximal band
+(often the whole image) would leave nothing to skip.
+
+See ``docs/ARCHITECTURE.md`` for the full ChainPlan contract and the
+scheduler lifecycle built on it.
 """
 from __future__ import annotations
 
@@ -54,6 +65,10 @@ SUBLANES = {4: 8, 2: 16, 1: 32, 8: 8}
 #: Bands per image the planner aims for on convergence-driven chains.
 CONVERGENT_TARGET_BANDS = 16
 
+#: Column tiles per band row the planner caps itself at (very wide
+#: images coarsen their tiles instead of growing the activity grid).
+CONVERGENT_TARGET_TILES = 16
+
 
 @dataclasses.dataclass(frozen=True)
 class ChainPlan:
@@ -71,12 +86,14 @@ class ChainPlan:
     n_bands: int         # bands per image
     n_chunks: int        # ceil(S / K) kernel launches for a fixed chain
     n_images: int = 1    # images stacked vertically in the working array
-    requeue_halo: int = 1        # bands re-activated around a changed band
+    requeue_halo: int = 1        # tiles re-activated around a changed tile
     compact_threshold: float = 0.0   # active fraction below which to compact
+    tile_w: int = 0      # column-tile width; 0 = full-width row bands
 
     def __post_init__(self):
-        # The one place the band/fuse contract is validated (the kernels
-        # assert it too, but every driver goes through a ChainPlan).
+        # The one place the band/fuse/tile contract is validated (the
+        # kernels assert it too, but every driver goes through a
+        # ChainPlan).
         if self.band_h % self.fuse_k:
             raise ValueError(
                 f"band_h={self.band_h} must be a multiple of fuse_k={self.fuse_k}"
@@ -90,6 +107,22 @@ class ChainPlan:
             raise ValueError("requeue_halo must be >= 1 (neighbour influence)")
         if not 0.0 <= self.compact_threshold <= 1.0:
             raise ValueError("compact_threshold must be in [0, 1]")
+        if self.tile_w < 0:
+            raise ValueError(f"tile_w={self.tile_w} must be >= 0")
+        if self.tile_w:
+            # Same contract as the row axis: the halo the kernels carry
+            # is fuse_k wide, so a tile must be at least one fuse_k and
+            # tile cleanly in both directions.
+            if self.tile_w % self.fuse_k:
+                raise ValueError(
+                    f"tile_w={self.tile_w} must be a multiple of "
+                    f"fuse_k={self.fuse_k} (or 0 for row-only bands)"
+                )
+            if self.width_pad % self.tile_w:
+                raise ValueError(
+                    f"width_pad={self.width_pad} must be a multiple of "
+                    f"tile_w={self.tile_w}"
+                )
 
     @property
     def key(self) -> tuple:
@@ -101,17 +134,29 @@ class ChainPlan:
         is the stable serialization-friendly form."""
         return (self.band_h, self.fuse_k, self.width_pad, self.height_pad,
                 self.n_bands, self.n_chunks, self.n_images,
-                self.requeue_halo, self.compact_threshold)
+                self.requeue_halo, self.compact_threshold, self.tile_w)
 
     @property
     def total_bands(self) -> int:
-        """Grid size for the stacked (n_images · height_pad) working array."""
+        """Vertical grid size for the stacked (n_images · height_pad) array."""
         return self.n_bands * self.n_images
 
     @property
+    def n_tiles(self) -> int:
+        """Column tiles per band row (1 when ``tile_w == 0``)."""
+        return self.width_pad // self.tile_w if self.tile_w else 1
+
+    @property
+    def total_tiles(self) -> int:
+        """Scheduling cells in the activity grid (``total_bands × n_tiles``).
+        This is the unit the requeue scheduler counts work in; for
+        row-only plans it equals ``total_bands``."""
+        return self.total_bands * self.n_tiles
+
+    @property
     def compact_capacity(self) -> int:
-        """Static workspace size (bands) for the compacted grid."""
-        return max(1, math.ceil(self.compact_threshold * self.total_bands))
+        """Static workspace size (tiles) for the compacted grid."""
+        return max(1, math.ceil(self.compact_threshold * self.total_tiles))
 
     @property
     def redundant_compute_fraction(self) -> float:
@@ -137,6 +182,7 @@ def plan_chain(
     convergent: bool = False,
     requeue_halo: int = 1,
     compact_threshold: float | None = None,
+    tile_w: int | None = None,
 ) -> ChainPlan:
     """Choose (TH, K) so the working set fits VMEM.
 
@@ -146,9 +192,18 @@ def plan_chain(
 
     ``convergent=True`` marks a convergence-driven chain (reconstruction
     / QDT): the planner caps the band height near
-    ``CONVERGENT_TARGET_BANDS`` bands per image so the active-band
-    requeue scheduler has skipping granularity, and enables compaction
-    (``compact_threshold=0.5``) unless overridden.
+    ``CONVERGENT_TARGET_BANDS`` bands per image so the active-tile
+    requeue scheduler has skipping granularity, enables compaction
+    (``compact_threshold=0.5``) and splits the width into column tiles
+    when it is wide enough — all unless overridden.
+
+    ``tile_w`` requests a column-tile width.  ``None`` auto-tiles
+    (convergent plans only), ``0`` forces full-width row bands.  A
+    requested width is rounded up to a ``fuse_k`` multiple; if the
+    result cannot tile the padded width, or ``fuse_k > tile_w`` (the
+    1-tile requeue halo would no longer bound the per-chunk influence),
+    the planner *falls back to row-only tiling* rather than produce an
+    inexact schedule.
     """
     b = jnp.dtype(dtype).itemsize
     w_pad = max(LANES, math.ceil(width / LANES) * LANES)
@@ -176,6 +231,19 @@ def plan_chain(
     if compact_threshold is None:
         compact_threshold = 0.5 if convergent else 0.0
 
+    if tile_w is None:
+        tile_w = _auto_tile_w(w_pad, fuse_k) if convergent else 0
+    elif tile_w > 0:
+        # honour the request when it can be made exact, else fall back
+        # to row-only: fuse_k > tile_w breaks the 1-tile halo bound, and
+        # a non-dividing width would leave ragged cells.
+        if tile_w < fuse_k:
+            tile_w = 0
+        else:
+            tile_w = math.ceil(tile_w / fuse_k) * fuse_k
+            if tile_w >= w_pad or w_pad % tile_w:
+                tile_w = 0
+
     h_pad = math.ceil(height / band_h) * band_h
     n_bands = h_pad // band_h
     n_chunks = math.ceil((chain_len or fuse_k) / fuse_k)
@@ -184,4 +252,21 @@ def plan_chain(
         n_images=n_images,
         requeue_halo=requeue_halo,
         compact_threshold=compact_threshold,
+        tile_w=tile_w,
     )
+
+
+def _auto_tile_w(w_pad: int, fuse_k: int) -> int:
+    """Column-tile width for convergent plans: the smallest lane-aligned
+    ``fuse_k``-multiple that divides ``w_pad`` while keeping at most
+    ``CONVERGENT_TARGET_TILES`` tiles across the width (very wide
+    images coarsen their tiles instead of growing the activity grid);
+    when every divisor overshoots the target the coarsest one wins.
+    0 (row-only) when no divisor yields at least two tiles."""
+    base = math.lcm(LANES, fuse_k)
+    divisors = [k * base for k in range(1, w_pad // (2 * base) + 1)
+                if w_pad % (k * base) == 0]
+    for tile_w in divisors:
+        if w_pad // tile_w <= CONVERGENT_TARGET_TILES:
+            return tile_w
+    return divisors[-1] if divisors else 0

@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Fused Pallas kernels for the paper's operators, plus their drivers.
+
+Layer contract (see ``docs/ARCHITECTURE.md`` for the full map): this
+package owns everything that executes as a Pallas grid — the fused
+K-step kernels (``erode_chain``, ``geodesic_chain``, ``qdt_chain``),
+their shared in-kernel helpers (``common``), the jit'd public wrappers
+and the active-tile requeue scheduler that drives the convergent ones
+(``ops``), and the oracle re-exports used by the kernel tests
+(``ref``).  Everything here must stay bit-exact against the pure-jnp
+definitions in ``repro.core`` — the scheduler may only change *when*
+work happens, never the result.
+"""

@@ -3,11 +3,14 @@
 Everything here executes inside a Pallas kernel body on VMEM-resident
 values.  The 1-D passes mirror the paper's decomposed SIMD kernels
 (Fig. 2): three displaced views min/max-ed together — on TPU the
-"displaced registers" are lane/sublane shifts of a vreg tile.
+"displaced registers" are lane/sublane shifts of a vreg tile.  The
+edge/identity-pinning helpers implement the bit-exactness contract
+documented in ``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 
 def image_edges(i, bands_per_image: int):
@@ -20,6 +23,91 @@ def image_edges(i, bands_per_image: int):
     """
     j = i % bands_per_image
     return j == 0, j == bands_per_image - 1
+
+
+def tile_edges(j, n_tiles: int):
+    """(at_left, at_right) for column-tile ``j`` of a ``n_tiles``-wide
+    activity grid.  Images are only ever stacked *vertically*, so the
+    horizontal image edges coincide with the array edges — the first and
+    last tile pin their column halos to the identity exactly like the
+    row axis pins at image edges."""
+    return j == 0, j == n_tiles - 1
+
+
+def tile_specs(band_h: int, tile_w: int, fuse_k: int, h: int, w: int):
+    """The nine BlockSpecs feeding one (band_h, tile_w) cell of a 2-D
+    grid its centre block and eight clamped neighbour halos, in
+    ``assemble_tile`` order (tl, top, tr, left, mid, right, bl, bot,
+    br).  Clamped edge reads are pinned in-kernel.
+
+    NOTE (on-TPU follow-up): the corner/side halo blocks are only
+    ``fuse_k`` lanes wide — fine in interpret mode, but narrower than
+    the 128-lane tiling Mosaic wants; interpret=False validation may
+    need them widened or fetched differently.
+    """
+    r = band_h // fuse_k   # fuse_k-row blocks per band
+    c = tile_w // fuse_k   # fuse_k-col blocks per tile
+    last_r = h // fuse_k - 1
+    last_c = w // fuse_k - 1
+
+    def up(i):
+        return jnp.maximum(i * r - 1, 0)
+
+    def dn(i):
+        return jnp.minimum((i + 1) * r, last_r)
+
+    def lf(j):
+        return jnp.maximum(j * c - 1, 0)
+
+    def rt(j):
+        return jnp.minimum((j + 1) * c, last_c)
+
+    kk, kw, bk = (fuse_k, fuse_k), (fuse_k, tile_w), (band_h, fuse_k)
+    return [
+        pl.BlockSpec(kk, lambda i, j: (up(i), lf(j))),
+        pl.BlockSpec(kw, lambda i, j: (up(i), j)),
+        pl.BlockSpec(kk, lambda i, j: (up(i), rt(j))),
+        pl.BlockSpec(bk, lambda i, j: (i, lf(j))),
+        pl.BlockSpec((band_h, tile_w), lambda i, j: (i, j)),
+        pl.BlockSpec(bk, lambda i, j: (i, rt(j))),
+        pl.BlockSpec(kk, lambda i, j: (dn(i), lf(j))),
+        pl.BlockSpec(kw, lambda i, j: (dn(i), j)),
+        pl.BlockSpec(kk, lambda i, j: (dn(i), rt(j))),
+    ]
+
+
+def assemble_tile(parts, edges, ident):
+    """Assemble one (band_h + 2K, tile_w + 2K) working stack from the
+    nine blocks of a 2-D tiled grid step, pinning out-of-image halos.
+
+    ``parts`` are the (tl, top, tr, left, mid, right, bl, bot, br)
+    kernel refs; ``edges`` the (at_top, at_bot, at_left, at_right)
+    scalars for this grid step.  Edge halos read *clamped* blocks (the
+    BlockSpec index maps clip at the array border), so every block whose
+    true source lies outside the image is replaced with ``ident`` here —
+    corners pin when either of their two axes is at an edge.  The result
+    is the 2-D analogue of the row kernels' top/mid/bot concatenation:
+    after K elementary steps the centre (band_h, tile_w) window is
+    exact.
+    """
+    tl, top, tr, lf, mid, rt, bl, bot, br = parts
+    at_top, at_bot, at_lf, at_rt = edges
+    row_t = jnp.concatenate([
+        jnp.where(jnp.logical_or(at_top, at_lf), ident, tl[...]),
+        jnp.where(at_top, ident, top[...]),
+        jnp.where(jnp.logical_or(at_top, at_rt), ident, tr[...]),
+    ], axis=1)
+    row_m = jnp.concatenate([
+        jnp.where(at_lf, ident, lf[...]),
+        mid[...],
+        jnp.where(at_rt, ident, rt[...]),
+    ], axis=1)
+    row_b = jnp.concatenate([
+        jnp.where(jnp.logical_or(at_bot, at_lf), ident, bl[...]),
+        jnp.where(at_bot, ident, bot[...]),
+        jnp.where(jnp.logical_or(at_bot, at_rt), ident, br[...]),
+    ], axis=1)
+    return jnp.concatenate([row_t, row_m, row_b], axis=0)
 
 
 def ident_for(op: str, dtype):

@@ -15,7 +15,13 @@ The stacked (TH+2K, W) tile lives in VMEM for all K elementary filter
 applications; validity shrinks one row per application from each stack
 edge, so after K steps the centre TH rows are exact.  This replaces the
 paper's per-row atomic synchronization between pipelined threads with
-redundant halo compute — the TPU-idiomatic trade (DESIGN.md §2).
+redundant halo compute — the TPU-idiomatic trade (the bit-exactness
+argument lives in ``docs/ARCHITECTURE.md``).
+
+Fixed-length chains have no convergence flag, so this kernel stays on
+the 1-D row-band grid; the 2-D tiled grids exist only on the
+convergence-driven kernels the requeue scheduler drives
+(``geodesic_chain``, ``qdt_chain``).
 
 Border semantics: the wrapper pads the image to (H_pad, W_pad) with the
 lattice identity; for a convex (rectangular) domain, iterated erosion

@@ -14,24 +14,34 @@ the paper are preserved exactly — including for geodesic paths, where
 the convexity argument alone would not suffice (a path through padding
 would dodge intermediate mask clamps).
 
-Convergence: the per-band flag is 1 iff any centre pixel changed during
+Convergence: the per-tile flag is 1 iff any centre pixel changed during
 the chunk.  Because the geodesic sequence is pointwise monotone, "no
 centre pixel anywhere changed across K steps" ⇔ global fixpoint of ε₁ᵐ
-(DESIGN.md §3) — this is the kernel-level version of the paper's
-``converged`` flag + requeue mechanism.
+— this is the kernel-level version of the paper's ``converged`` flag +
+requeue mechanism.
 
-Requeue scheduling (this file's side of it): each band carries an
-``active`` scalar.  When 0, the kernel early-outs under ``pl.when`` and
-writes the input band through unchanged with a zero flag — the skipped
-band costs one VMEM copy instead of K elementary filters.  The driver
-(kernels.ops) maintains the activity vector: a band is requeued iff it
-or a vertical neighbour changed in the previous chunk, which is exact
-because influence propagates at most ``fuse_k <= band_h`` rows per
-chunk.
+Requeue scheduling (this file's side of it — the driver's side lives in
+``kernels.ops`` and is documented in ``docs/ARCHITECTURE.md``): each
+scheduling cell carries an ``active`` scalar.  When 0, the kernel
+early-outs under ``pl.when`` and writes the input through unchanged
+with a zero flag — the skipped cell costs one VMEM copy instead of K
+elementary filters.  Three grid shapes share the one kernel body:
+
+* ``geodesic_chain_step`` — 1-D grid of full-width row bands (the
+  paper's Alg. 4 granularity); cells are bands.
+* ``geodesic_tile_step`` — 2-D grid of (row band × column tile) cells;
+  each grid step assembles a (band_h + 2K, tile_w + 2K) stack from the
+  nine neighbouring blocks so a narrow *vertical* wavefront can skip
+  the quiet column strips too.  Exact for
+  ``fuse_k <= min(band_h, tile_w)``.
+* ``geodesic_compact_step`` — 1-D grid over driver-gathered patches of
+  the active cells (compaction; halos pre-pinned by the gather).
 
 Batching: the driver stacks N images vertically into one
 (N·H_pad, W) array; ``bands_per_image`` makes the halo pinning happen
-at *image* edges so nothing leaks between stacked images.
+at *image* edges so nothing leaks between stacked images.  Horizontal
+image edges coincide with the array edges (images never stack
+sideways), so column-halo pinning is per-tile-row (``tile_edges``).
 """
 from __future__ import annotations
 
@@ -41,18 +51,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import elementary_3x3, ident_for, image_edges
+from repro.kernels.common import (assemble_tile, elementary_3x3, ident_for,
+                                  image_edges, tile_edges, tile_specs)
 
 
 def _geodesic_kernel(
     active, f_top, f_mid, f_bot, m_top, m_mid, m_bot, out, changed,
     *, op: str, fuse_k: int, band_h: int, bands_per_image: int,
-    pin_halos: bool,
 ):
     # program_id must be read outside the pl.when bodies (the branches
     # are compiled as plain cond branches in interpret mode, where the
     # primitive has no lowering).
-    edges = image_edges(pl.program_id(0), bands_per_image) if pin_halos else None
+    at_top, at_bot = image_edges(pl.program_id(0), bands_per_image)
 
     @pl.when(active[0, 0] == 0)
     def _passthrough():
@@ -63,17 +73,13 @@ def _geodesic_kernel(
     @pl.when(active[0, 0] > 0)
     def _compute():
         ident = ident_for(op, f_mid.dtype)
-        ftop, fbot = f_top[...], f_bot[...]
-        mtop, mbot = m_top[...], m_bot[...]
-        if pin_halos:
-            # Pin the out-of-image halo: marker ← identity, mask ←
-            # identity, so the pad region is absorbing and transmits
-            # nothing (also between stacked batch images).
-            at_top, at_bot = edges
-            ftop = jnp.where(at_top, ident, ftop)
-            fbot = jnp.where(at_bot, ident, fbot)
-            mtop = jnp.where(at_top, ident, mtop)
-            mbot = jnp.where(at_bot, ident, mbot)
+        # Pin the out-of-image halo: marker ← identity, mask ←
+        # identity, so the pad region is absorbing and transmits
+        # nothing (also between stacked batch images).
+        ftop = jnp.where(at_top, ident, f_top[...])
+        fbot = jnp.where(at_bot, ident, f_bot[...])
+        mtop = jnp.where(at_top, ident, m_top[...])
+        mbot = jnp.where(at_bot, ident, m_bot[...])
 
         stack = jnp.concatenate([ftop, f_mid[...], fbot], axis=0)
         mask = jnp.concatenate([mtop, m_mid[...], mbot], axis=0)
@@ -130,7 +136,7 @@ def geodesic_chain_step(
 
     kern = functools.partial(
         _geodesic_kernel, op=op, fuse_k=fuse_k, band_h=band_h,
-        bands_per_image=bands_per_image, pin_halos=True,
+        bands_per_image=bands_per_image,
     )
     out, changed = pl.pallas_call(
         kern,
@@ -150,52 +156,167 @@ def geodesic_chain_step(
     return out, changed
 
 
+def _geodesic_tile_kernel(
+    active, *refs,
+    op: str, fuse_k: int, band_h: int, tile_w: int,
+    bands_per_image: int, n_tiles: int,
+):
+    """2-D grid body: ``refs`` are 9 marker blocks, 9 mask blocks, then
+    the (out, changed) outputs."""
+    f_parts, m_parts = refs[:9], refs[9:18]
+    out, changed = refs[18], refs[19]
+    f_mid = f_parts[4]
+    at_top, at_bot = image_edges(pl.program_id(0), bands_per_image)
+    at_lf, at_rt = tile_edges(pl.program_id(1), n_tiles)
+    edges = (at_top, at_bot, at_lf, at_rt)
+
+    @pl.when(active[0, 0] == 0)
+    def _passthrough():
+        out[...] = f_mid[...]
+        changed[...] = jnp.zeros((1, 1), jnp.int32)
+
+    @pl.when(active[0, 0] > 0)
+    def _compute():
+        ident = ident_for(op, f_mid.dtype)
+        stack = assemble_tile(f_parts, edges, ident)
+        mask = assemble_tile(m_parts, edges, ident)
+
+        clamp = jnp.maximum if op == "erode" else jnp.minimum
+        for _ in range(fuse_k):
+            stack = clamp(elementary_3x3(stack, op), mask)
+
+        centre = stack[fuse_k : fuse_k + band_h, fuse_k : fuse_k + tile_w]
+        out[...] = centre
+        changed[...] = (
+            jnp.any(centre != f_mid[...]).astype(jnp.int32).reshape(1, 1)
+        )
+
+
+def geodesic_tile_step(
+    f: jnp.ndarray,
+    m: jnp.ndarray,
+    *,
+    op: str,
+    fuse_k: int,
+    band_h: int,
+    tile_w: int,
+    interpret: bool = True,
+    active: jnp.ndarray | None = None,
+    bands_per_image: int | None = None,
+):
+    """K fused geodesic steps on the 2-D (band × column-tile) grid.
+
+    Same contract as :func:`geodesic_chain_step` with the width split
+    into ``W // tile_w`` column tiles: ``active``/``changed`` are
+    (n_bands, n_tiles) int32 grids and inactive *tiles* (not just
+    bands) early-out.  Requires ``tile_w % fuse_k == 0`` and
+    ``W % tile_w == 0`` (``ChainPlan`` validates the same).
+    """
+    h, w = f.shape
+    assert f.shape == m.shape
+    assert h % band_h == 0 and band_h % fuse_k == 0
+    assert w % tile_w == 0 and tile_w % fuse_k == 0
+    n_bands = h // band_h
+    n_tiles = w // tile_w
+    if bands_per_image is None:
+        bands_per_image = n_bands
+    assert n_bands % bands_per_image == 0
+    if active is None:
+        active = jnp.ones((n_bands, n_tiles), jnp.int32)
+
+    act_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    plane = tile_specs(band_h, tile_w, fuse_k, h, w)
+    kern = functools.partial(
+        _geodesic_tile_kernel, op=op, fuse_k=fuse_k, band_h=band_h,
+        tile_w=tile_w, bands_per_image=bands_per_image, n_tiles=n_tiles,
+    )
+    out, changed = pl.pallas_call(
+        kern,
+        grid=(n_bands, n_tiles),
+        in_specs=[act_spec] + plane + plane,
+        out_specs=[pl.BlockSpec((band_h, tile_w), lambda i, j: (i, j)),
+                   act_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w), f.dtype),
+            jax.ShapeDtypeStruct((n_bands, n_tiles), jnp.int32),
+        ],
+        interpret=interpret,
+    )(active, *([f] * 9), *([m] * 9))
+    return out, changed
+
+
+def _geodesic_compact_kernel(
+    valid, f_patch, m_patch, out, changed,
+    *, op: str, fuse_k: int, band_h: int, tile_w: int,
+):
+    lo, hi = fuse_k, fuse_k + band_h
+    cl, cr = fuse_k, fuse_k + tile_w
+
+    @pl.when(valid[0, 0] == 0)
+    def _passthrough():
+        out[...] = f_patch[lo:hi, cl:cr]
+        changed[...] = jnp.zeros((1, 1), jnp.int32)
+
+    @pl.when(valid[0, 0] > 0)
+    def _compute():
+        stack = f_patch[...]
+        mask = m_patch[...]
+        centre0 = stack[lo:hi, cl:cr]
+        clamp = jnp.maximum if op == "erode" else jnp.minimum
+        for _ in range(fuse_k):
+            stack = clamp(elementary_3x3(stack, op), mask)
+        centre = stack[lo:hi, cl:cr]
+        out[...] = centre
+        changed[...] = (
+            jnp.any(centre != centre0).astype(jnp.int32).reshape(1, 1)
+        )
+
+
 def geodesic_compact_step(
-    f_top: jnp.ndarray,
-    f_mid: jnp.ndarray,
-    f_bot: jnp.ndarray,
-    m_top: jnp.ndarray,
-    m_mid: jnp.ndarray,
-    m_bot: jnp.ndarray,
+    f_patch: jnp.ndarray,
+    m_patch: jnp.ndarray,
     valid: jnp.ndarray,
     *,
     op: str,
     fuse_k: int,
     band_h: int,
+    tile_w: int,
     interpret: bool = True,
 ):
-    """Compacted-grid variant: the driver has already gathered the
-    active bands (and their halos, with image-edge pinning applied) into
-    dense workspaces, so block ``i`` simply reads slot ``i`` of each
-    operand.  ``valid`` masks workspace slots past the true active count
-    (their output is dropped at scatter time anyway).
+    """Compacted-grid variant: the driver has already gathered each
+    active cell into a (band_h + 2K, tile_w + 2K) *patch* — centre plus
+    halos on all four sides, image-edge pinning applied by the gather
+    (the kernel cannot know slot → image geometry).  Block ``i`` reads
+    slot ``i``; ``valid`` masks workspace slots past the true active
+    count (their output is dropped at scatter time anyway).
 
-    Shapes: f_mid/m_mid (C·band_h, W); f_top/f_bot/m_top/m_bot
-    (C·fuse_k, W); valid (C, 1) int32.  Returns (new_mid, changed).
+    Shapes: f_patch/m_patch (C·(band_h+2K), tile_w+2K); valid (C, 1)
+    int32.  Returns (new_mid (C·band_h, tile_w), changed (C, 1)).
+    Row-only plans use this too, with ``tile_w = width_pad``.
     """
-    cap_bh, w = f_mid.shape
-    assert cap_bh % band_h == 0
-    cap = cap_bh // band_h
-    assert f_top.shape == (cap * fuse_k, w)
+    ph = band_h + 2 * fuse_k
+    pw = tile_w + 2 * fuse_k
+    assert f_patch.shape == m_patch.shape and f_patch.shape[1] == pw
+    assert f_patch.shape[0] % ph == 0
+    cap = f_patch.shape[0] // ph
 
-    halo_spec = pl.BlockSpec((fuse_k, w), lambda i: (i, 0))
-    mid_spec = pl.BlockSpec((band_h, w), lambda i: (i, 0))
+    patch_spec = pl.BlockSpec((ph, pw), lambda i: (i, 0))
+    mid_spec = pl.BlockSpec((band_h, tile_w), lambda i: (i, 0))
     flag_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
 
     kern = functools.partial(
-        _geodesic_kernel, op=op, fuse_k=fuse_k, band_h=band_h,
-        bands_per_image=cap, pin_halos=False,
+        _geodesic_compact_kernel, op=op, fuse_k=fuse_k, band_h=band_h,
+        tile_w=tile_w,
     )
     out, changed = pl.pallas_call(
         kern,
         grid=(cap,),
-        in_specs=[flag_spec, halo_spec, mid_spec, halo_spec,
-                  halo_spec, mid_spec, halo_spec],
+        in_specs=[flag_spec, patch_spec, patch_spec],
         out_specs=[mid_spec, flag_spec],
         out_shape=[
-            jax.ShapeDtypeStruct((cap_bh, w), f_mid.dtype),
+            jax.ShapeDtypeStruct((cap * band_h, tile_w), f_patch.dtype),
             jax.ShapeDtypeStruct((cap, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(valid, f_top, f_mid, f_bot, m_top, m_mid, m_bot)
+    )(valid, f_patch, m_patch)
     return out, changed

@@ -25,20 +25,31 @@ Batching: every public op accepts either a single (H, W) image or an
 images; halo pinning at image edges (``bands_per_image``) keeps the
 images independent.
 
-Active-band requeue scheduling (the paper's Alg. 4 requeue mechanism):
-the convergence-driven drivers (``reconstruct``, ``qdt_planes``) keep
-the per-band ``changed`` flags as a live activity vector instead of
-collapsing them into one global bit.  A band is requeued for the next
-K-chunk iff it *or a vertical neighbour* changed — influence propagates
-at most ``fuse_k <= band_h`` rows per chunk, so a one-band halo
-(``plan.requeue_halo``) is exact.  Inactive bands are skipped by the
-kernel (``pl.when`` early-out); once the active fraction drops below
+Active-tile requeue scheduling (the paper's Alg. 4 requeue mechanism,
+extended to 2-D): the convergence-driven drivers (``reconstruct``,
+``qdt_planes``) keep the per-cell ``changed`` flags as a live activity
+grid instead of collapsing them into one global bit.  A *cell* is one
+row band (``plan.tile_w == 0``) or one band × column tile
+(``plan.tile_w > 0`` — ``total_bands × n_tiles`` grid); the 2-D grid is
+what lets a narrow vertical wavefront skip the quiet column strips a
+full-width band scheduler would re-process every chunk.  A cell is
+requeued for the next K-chunk iff it *or a Chebyshev neighbour*
+changed — influence propagates at most ``fuse_k`` pixels per chunk in
+any direction, so a one-cell halo (``plan.requeue_halo``) is exact for
+``fuse_k <= min(band_h, tile_w)`` (``plan_chain`` falls back to
+row-only tiling otherwise).  Inactive cells are skipped by the kernel
+(``pl.when`` early-out); once the active fraction drops below
 ``plan.compact_threshold`` the driver additionally *compacts*: it
-gathers the active bands (and their pre-pinned halos) into a dense
-workspace of ``plan.compact_capacity`` bands and launches the smaller
-grid, scattering results back.  Per-image convergence in batched mode
-falls out for free: a finished image's bands all go inactive and stop
+gathers the active cells as (band_h+2K, tile_w+2K) patches (halos
+pre-pinned at image edges) into a dense workspace of
+``plan.compact_capacity`` cells and launches the smaller grid,
+scattering centre windows back.  Per-image convergence in batched mode
+falls out for free: a finished image's cells all go inactive and stop
 contributing work while the remaining images iterate.
+
+The full lifecycle (activity vector → halo dilation → compaction →
+scatter) and the ChainPlan contract it hangs off are documented in
+``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
@@ -52,8 +63,11 @@ from repro.core import morphology as M
 from repro.core.chain import ChainPlan, plan_chain
 from repro.kernels.common import ident_for
 from repro.kernels.erode_chain import chain_step
-from repro.kernels.geodesic_chain import geodesic_chain_step, geodesic_compact_step
-from repro.kernels.qdt_chain import qdt_chain_step, qdt_compact_step
+from repro.kernels.geodesic_chain import (geodesic_chain_step,
+                                          geodesic_compact_step,
+                                          geodesic_tile_step)
+from repro.kernels.qdt_chain import (qdt_chain_step, qdt_compact_step,
+                                     qdt_tile_step)
 
 Backend = Literal["pallas", "xla"]
 
@@ -62,11 +76,19 @@ _INTERPRET = jax.default_backend() != "tpu"
 
 class ReconstructStats(NamedTuple):
     """Per-run scheduling statistics (the paper's Table 5 chain lengths,
-    extended with the requeue scheduler's band-level accounting)."""
+    extended with the requeue scheduler's cell-level accounting).
+
+    The unit is one *scheduling cell*: a full-width row band for
+    row-only plans, a band × column tile for 2-D tiled plans
+    (``plan.tile_w > 0``) — i.e. one kernel grid step.  The legacy
+    field names say "band" because row-only cells are bands; for tiled
+    plans ``total_bands`` reports ``plan.total_tiles`` so the
+    ``active_band_sum / (total_bands · chunks)`` active-fraction recipe
+    keeps working unchanged."""
 
     chunks: jnp.ndarray           # int32: K-chunk iterations executed
-    active_band_sum: jnp.ndarray  # int32: Σ scheduled bands over all chunks
-    total_bands: jnp.ndarray      # int32: bands in the padded stack
+    active_band_sum: jnp.ndarray  # int32: Σ scheduled cells over all chunks
+    total_bands: jnp.ndarray      # int32: cells in the padded stack
     active_per_chunk: jnp.ndarray  # int32[max_chunks], 0 past ``chunks``
 
 
@@ -122,60 +144,95 @@ def _plan_for(f3: jnp.ndarray, plan: ChainPlan | None) -> None:
 
 
 # ---------------------------------------------------------------------------
-# active-band bookkeeping
+# active-cell bookkeeping (cell = row band × column tile; n_tiles may be 1)
 # ---------------------------------------------------------------------------
 
 
+def _cell_tile_w(plan: ChainPlan) -> int:
+    """Pixel width of one scheduling cell (full width for row-only)."""
+    return plan.tile_w or plan.width_pad
+
+
 def _dilate_active(flags: jnp.ndarray, plan: ChainPlan) -> jnp.ndarray:
-    """Requeue set from changed flags: a band is active next chunk iff it
-    or a vertical neighbour (within the same image) changed."""
-    a = flags.reshape(plan.n_images, plan.n_bands)
+    """Requeue set from changed flags: a cell is active next chunk iff it
+    or a Chebyshev neighbour (vertical within the same image, horizontal
+    within the row, diagonals included) changed.  Diagonals matter for
+    2-D tiles because influence propagates ``fuse_k`` pixels per chunk
+    in *Chebyshev* distance; the separable row-then-column max over an
+    already-row-dilated grid is exactly that 3×3 dilation."""
+    a = flags.reshape(plan.n_images, plan.n_bands, plan.n_tiles)
     for _ in range(plan.requeue_halo):
-        up = jnp.pad(a[:, 1:], ((0, 0), (0, 1)))
-        dn = jnp.pad(a[:, :-1], ((0, 0), (1, 0)))
+        up = jnp.pad(a[:, 1:], ((0, 0), (0, 1), (0, 0)))
+        dn = jnp.pad(a[:, :-1], ((0, 0), (1, 0), (0, 0)))
         a = jnp.maximum(a, jnp.maximum(up, dn))
-    return a.reshape(-1, 1)
+        if plan.n_tiles > 1:
+            lf = jnp.pad(a[:, :, 1:], ((0, 0), (0, 0), (0, 1)))
+            rt = jnp.pad(a[:, :, :-1], ((0, 0), (0, 0), (1, 0)))
+            a = jnp.maximum(a, jnp.maximum(lf, rt))
+    return a.reshape(plan.total_bands, plan.n_tiles)
+
+
+def _gather_patches(x2: jnp.ndarray, idx: jnp.ndarray, plan: ChainPlan, ident):
+    """Gather (band_h+2K, tile_w+2K) halo patches for flat cell indices
+    ``idx`` from a stacked (TOTAL_H, W) array → (C·(band_h+2K),
+    tile_w+2K).  Rows outside the cell's *image* and columns outside the
+    array are pinned to ``ident`` here, since the compact kernel cannot
+    know slot → image geometry.  Sentinel slots (idx == total_tiles)
+    come back all-``ident`` (their output is dropped at scatter)."""
+    bh, k, tw = plan.band_h, plan.fuse_k, _cell_tile_w(plan)
+    h, w = x2.shape
+    bi = idx // plan.n_tiles         # global band index
+    tj = idx % plan.n_tiles          # column tile index
+    rows = bi[:, None] * bh - k + jnp.arange(bh + 2 * k)[None, :]
+    cols = tj[:, None] * tw - k + jnp.arange(tw + 2 * k)[None, :]
+    img0 = (bi // plan.n_bands) * plan.height_pad
+    row_ok = (rows >= img0[:, None]) & (rows < img0[:, None] + plan.height_pad)
+    col_ok = (cols >= 0) & (cols < w)
+    g = jnp.take(x2, jnp.clip(rows, 0, h - 1), axis=0)
+    g = jnp.take_along_axis(
+        g, jnp.broadcast_to(jnp.clip(cols, 0, w - 1)[:, None, :],
+                            (idx.shape[0], bh + 2 * k, tw + 2 * k)),
+        axis=2,
+    )
+    g = jnp.where(row_ok[:, :, None] & col_ok[:, None, :], g, ident)
+    return g.reshape(-1, tw + 2 * k)
+
+
+def _cell_view(x2: jnp.ndarray, plan: ChainPlan) -> jnp.ndarray:
+    """(TOTAL_H, W) → (total_tiles, band_h, tile_w) cell-major view."""
+    bh, tw, nt = plan.band_h, _cell_tile_w(plan), plan.n_tiles
+    return (x2.reshape(plan.total_bands, bh, nt, tw)
+            .transpose(0, 2, 1, 3).reshape(-1, bh, tw))
 
 
 def _gather_mid(x2: jnp.ndarray, idx: jnp.ndarray, plan: ChainPlan) -> jnp.ndarray:
-    """Gather the centre rows of global bands ``idx`` → (C·band_h, W)."""
-    x3 = x2.reshape(-1, plan.band_h, x2.shape[1])
-    return jnp.take(x3, idx, axis=0, mode="clip").reshape(-1, x2.shape[1])
-
-
-def _gather_bands(x2: jnp.ndarray, idx: jnp.ndarray, plan: ChainPlan, ident):
-    """Gather (top, mid, bot) row blocks for global bands ``idx`` from a
-    stacked (TOTAL_H, W) array.  Halos crossing an image edge are pinned
-    to ``ident`` here, since the compact kernel cannot know slot → image
-    geometry."""
-    bh, k, nb = plan.band_h, plan.fuse_k, plan.n_bands
-    w = x2.shape[1]
-    mid = _gather_mid(x2, idx, plan)
-
-    j = idx % nb  # band-within-image (sentinel slots pin to ident, harmless)
-    top_rows = idx[:, None] * bh - k + jnp.arange(k)[None, :]
-    bot_rows = (idx[:, None] + 1) * bh + jnp.arange(k)[None, :]
-    top = jnp.take(x2, jnp.clip(top_rows, 0, x2.shape[0] - 1), axis=0)
-    bot = jnp.take(x2, jnp.clip(bot_rows, 0, x2.shape[0] - 1), axis=0)
-    top = jnp.where((j == 0)[:, None, None], ident, top)
-    bot = jnp.where((j == nb - 1)[:, None, None], ident, bot)
-    return top.reshape(-1, w), mid, bot.reshape(-1, w)
+    """Gather the centre windows of cells ``idx`` → (C·band_h, tile_w)."""
+    cells = jnp.take(_cell_view(x2, plan), idx, axis=0, mode="clip")
+    return cells.reshape(-1, _cell_tile_w(plan))
 
 
 def _scatter_mid(
     x2: jnp.ndarray, idx: jnp.ndarray, new_mid: jnp.ndarray, plan: ChainPlan
 ) -> jnp.ndarray:
-    """Scatter compact-workspace centre rows back; sentinel slots
-    (idx == total_bands, out of bounds) are dropped."""
-    w = x2.shape[1]
-    x3 = x2.reshape(-1, plan.band_h, w)
-    upd = new_mid.reshape(-1, plan.band_h, w)
-    return x3.at[idx].set(upd, mode="drop").reshape(x2.shape)
+    """Scatter compact-workspace centre windows back; sentinel slots
+    (idx == total_tiles, out of bounds) are dropped."""
+    bh, tw, nt = plan.band_h, _cell_tile_w(plan), plan.n_tiles
+    upd = new_mid.reshape(-1, bh, tw)
+    cells = _cell_view(x2, plan).at[idx].set(upd, mode="drop")
+    return (cells.reshape(plan.total_bands, nt, bh, tw)
+            .transpose(0, 2, 1, 3).reshape(x2.shape))
+
+
+def _scatter_flags(ch: jnp.ndarray, idx: jnp.ndarray, plan: ChainPlan):
+    """Workspace-slot changed flags → full (total_bands, n_tiles) grid."""
+    flat = jnp.zeros((plan.total_tiles,), jnp.int32)
+    flat = flat.at[idx].set(ch.ravel(), mode="drop")
+    return flat.reshape(plan.total_bands, plan.n_tiles)
 
 
 def _active_indices(active: jnp.ndarray, plan: ChainPlan):
-    """Dense slot → global band index map for the compact workspace."""
-    total = plan.total_bands
+    """Dense slot → flat cell index map for the compact workspace."""
+    total = plan.total_tiles
     idx = jnp.nonzero(
         active.ravel() > 0, size=plan.compact_capacity, fill_value=total
     )[0].astype(jnp.int32)
@@ -320,38 +377,41 @@ def _drive_scheduler(
     max_chunks: int,
     with_stats: bool = False,
 ):
-    """Shared active-band requeue driver loop (the paper's Alg. 4 work
+    """Shared active-cell requeue driver loop (the paper's Alg. 4 work
     queue).  One loop serves every convergence-driven chain —
     reconstruction, QDT, and whatever ``repro.serve`` routes through
     them — and owns the full-grid/compact-grid cond, the changed-flag →
     requeue-set dilation, per-image chunk counters, and the scheduling
-    statistics.  The chain being driven is supplied as a state pytree
-    plus step functions:
+    statistics.  The activity state is a (total_bands, n_tiles) int32
+    grid (n_tiles == 1 for row-only plans).  The chain being driven is
+    supplied as a state pytree plus step functions:
 
     ``full_step(data, active, base) -> (data, flags)``
         one K-chunk over the full stacked grid.  ``base`` is a
         (total_bands, 1) int32 giving the number of elementary filters
         already applied to each band's *image* — counters advance
-        per-image, only while the image still has active bands, so
+        per-image, only while the image still has active cells, so
         ragged-converged stacks stay consistent (QDT indexes its
-        d-plane with it; reconstruction ignores it).
+        d-plane with it; reconstruction ignores it).  ``flags`` comes
+        back (total_bands, n_tiles).
     ``compact_step(data, idx, valid, const, base) -> (data, flags)``
-        one K-chunk on the compacted grid of gathered bands ``idx``
-        (``valid`` masks workspace slots past the true active count).
+        one K-chunk on the compacted grid of gathered cells ``idx``
+        (flat indices into the activity grid; ``valid`` masks workspace
+        slots past the true active count).
     ``gather_const(idx) -> pytree``
         gathers the *chunk-invariant* compact operands (e.g. the
-        geodesic mask bands).  The driver caches the result and reuses
-        it while the active band set is unchanged between chunks, so a
-        localized wavefront iterating inside the same bands does not
-        re-gather the mask every chunk.
+        geodesic mask patches).  The driver caches the result and
+        reuses it while the active cell set is unchanged between
+        chunks, so a localized wavefront iterating inside the same
+        cells does not re-gather the mask every chunk.
 
-    Returns (data, chunks, active_band_sum, active_per_chunk).  The
+    Returns (data, chunks, active_cell_sum, active_per_chunk).  The
     per-chunk trace is only carried through the loop when
     ``with_stats`` — it is a max_chunks-sized array updated by scatter
     every chunk, which the plain paths must not pay for (XLA cannot
     DCE loop-carried state).
     """
-    total = plan.total_bands
+    total = plan.total_tiles
     cap = plan.compact_capacity
     use_compact = (
         compact_step is not None
@@ -369,7 +429,7 @@ def _drive_scheduler(
         key0, val0 = jnp.zeros((0,), jnp.int32), ()
 
     def img_active(active):
-        return jnp.any(active.reshape(plan.n_images, plan.n_bands) > 0, axis=1)
+        return jnp.any(active.reshape(plan.n_images, -1) > 0, axis=1)
 
     def cond(state):
         active, it = state[1], state[2]
@@ -416,7 +476,7 @@ def _drive_scheduler(
 
     init = (
         data,
-        jnp.ones((total, 1), jnp.int32),
+        jnp.ones((plan.total_bands, plan.n_tiles), jnp.int32),
         jnp.asarray(0, jnp.int32),
         jnp.zeros((plan.n_images,), jnp.int32),
         jnp.asarray(0, jnp.int32),
@@ -434,31 +494,35 @@ def _scheduled_reconstruct(fp, mp, plan: ChainPlan, op: str, max_chunks: int,
 
     ``fp``/``mp`` are stacked (TOTAL_H, W_pad) arrays.  The mask is
     chunk-invariant, so its compact-workspace gather goes through the
-    driver's ``gather_const`` cache.
+    driver's ``gather_const`` cache.  Tiled plans run the 2-D grid
+    kernel for full chunks; compaction is patch-based either way.
     """
-    total = plan.total_bands
     ident = ident_for(op, fp.dtype)
 
     def full_step(x, active, base):
+        if plan.n_tiles > 1:
+            return geodesic_tile_step(
+                x, mp, op=op, fuse_k=plan.fuse_k, band_h=plan.band_h,
+                tile_w=plan.tile_w, interpret=_INTERPRET, active=active,
+                bands_per_image=plan.n_bands,
+            )
         return geodesic_chain_step(
             x, mp, op=op, fuse_k=plan.fuse_k, band_h=plan.band_h,
             interpret=_INTERPRET, active=active, bands_per_image=plan.n_bands,
         )
 
     def gather_const(idx):
-        return _gather_bands(mp, idx, plan, ident)
+        return _gather_patches(mp, idx, plan, ident)
 
-    def compact_step(x, idx, valid, mask_bands, base):
-        ft, fm, fb = _gather_bands(x, idx, plan, ident)
-        mt, mm, mb = mask_bands
+    def compact_step(x, idx, valid, mask_patch, base):
+        f_patch = _gather_patches(x, idx, plan, ident)
         new_mid, ch = geodesic_compact_step(
-            ft, fm, fb, mt, mm, mb, valid,
+            f_patch, mask_patch, valid,
             op=op, fuse_k=plan.fuse_k, band_h=plan.band_h,
-            interpret=_INTERPRET,
+            tile_w=_cell_tile_w(plan), interpret=_INTERPRET,
         )
         x = _scatter_mid(x, idx, new_mid, plan)
-        flags = jnp.zeros((total, 1), jnp.int32).at[idx].set(ch, mode="drop")
-        return x, flags
+        return x, _scatter_flags(ch, idx, plan)
 
     return _drive_scheduler(
         plan, fp, full_step=full_step, compact_step=compact_step,
@@ -496,7 +560,7 @@ def _reconstruct_impl(f, m, op, backend, max_chunks, plan, with_stats=False):
     stats = ReconstructStats(
         chunks=chunks,
         active_band_sum=asum,
-        total_bands=jnp.asarray(plan.total_bands, jnp.int32),
+        total_bands=jnp.asarray(plan.total_tiles, jnp.int32),
         active_per_chunk=per_chunk,
     )
     return _crop(_unstacked(out, f3.shape[0]), f.shape, was_2d), stats
@@ -588,7 +652,6 @@ def qdt_planes(
         max_chunks = max(f3.shape[1], f3.shape[2]) // k + 2
     acc = jnp.float32 if jnp.issubdtype(f.dtype, jnp.floating) else jnp.int32
 
-    total = plan.total_bands
     ident = ident_for("erode", f.dtype)
 
     fp = _stacked(_pad(f3, plan, ident))
@@ -597,29 +660,40 @@ def qdt_planes(
 
     def full_step(data, active, base):
         x, r, d = data
-        x, r, d, ch = qdt_chain_step(
-            x, r, d, base, fuse_k=k, band_h=plan.band_h,
-            interpret=_INTERPRET, active=active, bands_per_image=plan.n_bands,
-        )
+        if plan.n_tiles > 1:
+            x, r, d, ch = qdt_tile_step(
+                x, r, d, jnp.broadcast_to(base, (plan.total_bands,
+                                                 plan.n_tiles)),
+                fuse_k=k, band_h=plan.band_h, tile_w=plan.tile_w,
+                interpret=_INTERPRET, active=active,
+                bands_per_image=plan.n_bands,
+            )
+        else:
+            x, r, d, ch = qdt_chain_step(
+                x, r, d, base, fuse_k=k, band_h=plan.band_h,
+                interpret=_INTERPRET, active=active,
+                bands_per_image=plan.n_bands,
+            )
         return (x, r, d), ch
 
     def compact_step(data, idx, valid, const, base):
         x, r, d = data
-        ft, fm, fb = _gather_bands(x, idx, plan, ident)
+        f_patch = _gather_patches(x, idx, plan, ident)
         rm = _gather_mid(r, idx, plan)
         dm = _gather_mid(d, idx, plan)
-        # per-slot distance offset: each gathered band carries its own
+        # per-slot distance offset: each gathered cell carries its own
         # image's erosion count (sentinel slots clip — dropped anyway).
-        base_slots = jnp.take(base.ravel(), idx, mode="clip")[:, None]
+        base_slots = jnp.take(base.ravel(), idx // plan.n_tiles,
+                              mode="clip")[:, None]
         f2, r2, d2, ch = qdt_compact_step(
-            ft, fm, fb, rm, dm, valid, base_slots,
-            fuse_k=k, band_h=plan.band_h, interpret=_INTERPRET,
+            f_patch, rm, dm, valid, base_slots,
+            fuse_k=k, band_h=plan.band_h, tile_w=_cell_tile_w(plan),
+            interpret=_INTERPRET,
         )
         x = _scatter_mid(x, idx, f2, plan)
         r = _scatter_mid(r, idx, r2, plan)
         d = _scatter_mid(d, idx, d2, plan)
-        flags = jnp.zeros((total, 1), jnp.int32).at[idx].set(ch, mode="drop")
-        return (x, r, d), flags
+        return (x, r, d), _scatter_flags(ch, idx, plan)
 
     (_, r, d), _, _, _ = _drive_scheduler(
         plan, (fp, rp, dp), full_step=full_step, compact_step=compact_step,

@@ -6,13 +6,19 @@ distance plane d(f) (update only where the new residual exceeds the
 stored one).  The paper uses AVX2 masked stores for this; on TPU the
 masked store is a vectorized ``jnp.where`` on the VMEM tile.
 
-r/d only need the centre rows (their update is pointwise), so they are
-blocked without halo — only the eroding image carries the K-row halo.
+r/d only need the centre window (their update is pointwise), so they
+are blocked without halo — only the eroding image carries the K-pixel
+halo.
 
-Like the geodesic kernel, each band carries an ``active`` scalar: once a
-band's erosion has reached the lattice bottom everywhere (no pixel
-changed, nor in its neighbours), the driver stops requeueing it and the
-kernel passes f/r/d through unchanged under ``pl.when``.
+Like the geodesic kernel, each scheduling cell carries an ``active``
+scalar: once a cell's erosion has reached the lattice bottom everywhere
+(no pixel changed, nor in its neighbours), the driver stops requeueing
+it and the kernel passes f/r/d through unchanged under ``pl.when``.
+The same three grid shapes exist as in ``geodesic_chain``:
+``qdt_chain_step`` (full-width row bands), ``qdt_tile_step`` (2-D
+band × column-tile grid) and ``qdt_compact_step`` (dense workspace of
+driver-gathered patches).  The scheduler lifecycle these plug into is
+documented in ``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
@@ -22,13 +28,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import elementary_3x3, ident_for, image_edges
+from repro.kernels.common import (assemble_tile, elementary_3x3, ident_for,
+                                  image_edges, tile_edges, tile_specs)
+
+
+def _qdt_update(stack, r, d, j0, window, *, fuse_k: int, acc_dtype):
+    """The K-step masked-store loop shared by every QDT grid shape.
+
+    ``window`` slices the centre (band_h, tile_w) region out of the
+    halo-extended ``stack``; r/d are centre-only.  Returns the final
+    centre, r, d."""
+    (lo, hi), (cl, cr) = window
+    for k in range(fuse_k):
+        nxt = elementary_3x3(stack, "erode")
+        res = (stack[lo:hi, cl:cr].astype(acc_dtype)
+               - nxt[lo:hi, cl:cr].astype(acc_dtype))
+        upd = res > r
+        r = jnp.where(upd, res, r)
+        d = jnp.where(upd, j0 + (k + 1), d)
+        stack = nxt
+    return stack[lo:hi, cl:cr], r, d
 
 
 def _qdt_kernel(
     base, active, f_top, f_mid, f_bot, r_in, d_in, f_out, r_out, d_out, changed,
     *, fuse_k: int, band_h: int, acc_dtype, bands_per_image: int,
-    pin_halos: bool,
 ):
     # ``base`` is blocked per band: each band reads the elementary-erosion
     # count already applied to *its image*, so ragged-converged stacks
@@ -36,7 +60,7 @@ def _qdt_kernel(
     # advancing with the rest of the batch).
     # program_id is not available inside pl.when branches in interpret
     # mode — read it at kernel top level.
-    edges = image_edges(pl.program_id(0), bands_per_image) if pin_halos else None
+    at_top, at_bot = image_edges(pl.program_id(0), bands_per_image)
 
     @pl.when(active[0, 0] == 0)
     def _passthrough():
@@ -49,27 +73,16 @@ def _qdt_kernel(
     @pl.when(active[0, 0] > 0)
     def _compute():
         ident = ident_for("erode", f_mid.dtype)
-        top, bot = f_top[...], f_bot[...]
-        if pin_halos:
-            at_top, at_bot = edges
-            top = jnp.where(at_top, ident, top)
-            bot = jnp.where(at_bot, ident, bot)
+        top = jnp.where(at_top, ident, f_top[...])
+        bot = jnp.where(at_bot, ident, f_bot[...])
         stack = jnp.concatenate([top, f_mid[...], bot], axis=0)
 
-        r = r_in[...]
-        d = d_in[...]
-        j0 = base[0, 0]
-
-        lo, hi = fuse_k, fuse_k + band_h
-        for k in range(fuse_k):
-            nxt = elementary_3x3(stack, "erode")
-            res = stack[lo:hi, :].astype(acc_dtype) - nxt[lo:hi, :].astype(acc_dtype)
-            upd = res > r
-            r = jnp.where(upd, res, r)
-            d = jnp.where(upd, j0 + (k + 1), d)
-            stack = nxt
-
-        centre = stack[lo:hi, :]
+        w = f_mid.shape[1]
+        centre, r, d = _qdt_update(
+            stack, r_in[...], d_in[...], base[0, 0],
+            ((fuse_k, fuse_k + band_h), (0, w)),
+            fuse_k=fuse_k, acc_dtype=acc_dtype,
+        )
         f_out[...] = centre
         r_out[...] = r
         d_out[...] = d
@@ -124,7 +137,7 @@ def qdt_chain_step(
 
     kern = functools.partial(
         _qdt_kernel, fuse_k=fuse_k, band_h=band_h, acc_dtype=acc_dtype,
-        bands_per_image=bands_per_image, pin_halos=True,
+        bands_per_image=bands_per_image,
     )
     return pl.pallas_call(
         kern,
@@ -142,10 +155,135 @@ def qdt_chain_step(
     )(base, active, f, f, f, r, d)
 
 
+def _qdt_tile_kernel(
+    base, active, *refs,
+    fuse_k: int, band_h: int, tile_w: int, acc_dtype,
+    bands_per_image: int, n_tiles: int,
+):
+    """2-D grid body: ``refs`` are 9 f blocks, r_in, d_in, then the
+    (f_out, r_out, d_out, changed) outputs."""
+    f_parts = refs[:9]
+    r_in, d_in = refs[9], refs[10]
+    f_out, r_out, d_out, changed = refs[11:]
+    f_mid = f_parts[4]
+    at_top, at_bot = image_edges(pl.program_id(0), bands_per_image)
+    at_lf, at_rt = tile_edges(pl.program_id(1), n_tiles)
+
+    @pl.when(active[0, 0] == 0)
+    def _passthrough():
+        f_out[...] = f_mid[...]
+        r_out[...] = r_in[...]
+        d_out[...] = d_in[...]
+        changed[...] = jnp.zeros((1, 1), jnp.int32)
+
+    @pl.when(active[0, 0] > 0)
+    def _compute():
+        ident = ident_for("erode", f_mid.dtype)
+        stack = assemble_tile(f_parts, (at_top, at_bot, at_lf, at_rt), ident)
+        centre, r, d = _qdt_update(
+            stack, r_in[...], d_in[...], base[0, 0],
+            ((fuse_k, fuse_k + band_h), (fuse_k, fuse_k + tile_w)),
+            fuse_k=fuse_k, acc_dtype=acc_dtype,
+        )
+        f_out[...] = centre
+        r_out[...] = r
+        d_out[...] = d
+        changed[...] = (
+            jnp.any(centre != f_mid[...]).astype(jnp.int32).reshape(1, 1)
+        )
+
+
+def qdt_tile_step(
+    f: jnp.ndarray,
+    r: jnp.ndarray,
+    d: jnp.ndarray,
+    base: jnp.ndarray,
+    *,
+    fuse_k: int,
+    band_h: int,
+    tile_w: int,
+    interpret: bool = True,
+    active: jnp.ndarray | None = None,
+    bands_per_image: int | None = None,
+):
+    """One K-step QDT chunk on the 2-D (band × column-tile) grid.
+
+    Same contract as :func:`qdt_chain_step` with the width split into
+    ``W // tile_w`` column tiles: ``base``/``active``/``changed`` are
+    (n_bands, n_tiles) int32 grids (``base`` stays per-*image*; the
+    driver broadcasts it across each band's tiles).
+    """
+    h, w = f.shape
+    assert h % band_h == 0 and band_h % fuse_k == 0
+    assert w % tile_w == 0 and tile_w % fuse_k == 0
+    n_bands = h // band_h
+    n_tiles = w // tile_w
+    if bands_per_image is None:
+        bands_per_image = n_bands
+    assert n_bands % bands_per_image == 0
+    if active is None:
+        active = jnp.ones((n_bands, n_tiles), jnp.int32)
+    if base.shape == (1, 1):
+        base = jnp.broadcast_to(base, (n_bands, n_tiles))
+    assert base.shape == (n_bands, n_tiles)
+    acc_dtype = jnp.float32 if jnp.issubdtype(f.dtype, jnp.floating) else jnp.int32
+    assert r.dtype == acc_dtype and d.dtype == jnp.int32
+
+    flag_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    mid_spec = pl.BlockSpec((band_h, tile_w), lambda i, j: (i, j))
+    plane = tile_specs(band_h, tile_w, fuse_k, h, w)
+    kern = functools.partial(
+        _qdt_tile_kernel, fuse_k=fuse_k, band_h=band_h, tile_w=tile_w,
+        acc_dtype=acc_dtype, bands_per_image=bands_per_image,
+        n_tiles=n_tiles,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(n_bands, n_tiles),
+        in_specs=[flag_spec, flag_spec] + plane + [mid_spec, mid_spec],
+        out_specs=[mid_spec, mid_spec, mid_spec, flag_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w), f.dtype),
+            jax.ShapeDtypeStruct((h, w), acc_dtype),
+            jax.ShapeDtypeStruct((h, w), jnp.int32),
+            jax.ShapeDtypeStruct((n_bands, n_tiles), jnp.int32),
+        ],
+        interpret=interpret,
+    )(base, active, *([f] * 9), r, d)
+
+
+def _qdt_compact_kernel(
+    base, valid, f_patch, r_in, d_in, f_out, r_out, d_out, changed,
+    *, fuse_k: int, band_h: int, tile_w: int, acc_dtype,
+):
+    lo, hi = fuse_k, fuse_k + band_h
+    cl, cr = fuse_k, fuse_k + tile_w
+
+    @pl.when(valid[0, 0] == 0)
+    def _passthrough():
+        f_out[...] = f_patch[lo:hi, cl:cr]
+        r_out[...] = r_in[...]
+        d_out[...] = d_in[...]
+        changed[...] = jnp.zeros((1, 1), jnp.int32)
+
+    @pl.when(valid[0, 0] > 0)
+    def _compute():
+        stack = f_patch[...]
+        centre0 = stack[lo:hi, cl:cr]
+        centre, r, d = _qdt_update(
+            stack, r_in[...], d_in[...], base[0, 0],
+            ((lo, hi), (cl, cr)), fuse_k=fuse_k, acc_dtype=acc_dtype,
+        )
+        f_out[...] = centre
+        r_out[...] = r
+        d_out[...] = d
+        changed[...] = (
+            jnp.any(centre != centre0).astype(jnp.int32).reshape(1, 1)
+        )
+
+
 def qdt_compact_step(
-    f_top: jnp.ndarray,
-    f_mid: jnp.ndarray,
-    f_bot: jnp.ndarray,
+    f_patch: jnp.ndarray,
     r_mid: jnp.ndarray,
     d_mid: jnp.ndarray,
     valid: jnp.ndarray,
@@ -153,44 +291,47 @@ def qdt_compact_step(
     *,
     fuse_k: int,
     band_h: int,
+    tile_w: int,
     interpret: bool = True,
 ):
-    """Compacted-grid QDT chunk on driver-gathered active bands.
+    """Compacted-grid QDT chunk on driver-gathered active cells.
 
-    Shapes mirror ``geodesic_compact_step``: f_mid/r_mid/d_mid
-    (C·band_h, W), f_top/f_bot (C·fuse_k, W), valid (C, 1) int32,
-    base (C, 1) int32 — the driver gathers each active band's per-image
-    erosion count into the workspace slot (a (1, 1) array is broadcast).
-    Returns (f', r', d', changed).
+    Shapes mirror ``geodesic_compact_step``: f_patch
+    (C·(band_h+2K), tile_w+2K) with halos pre-pinned by the gather,
+    r_mid/d_mid (C·band_h, tile_w) centre-only, valid/base (C, 1) int32
+    — the driver gathers each active cell's per-image erosion count
+    into its workspace slot (a (1, 1) array is broadcast).  Returns
+    (f', r', d', changed); row-only plans use ``tile_w = width_pad``.
     """
-    cap_bh, w = f_mid.shape
-    assert cap_bh % band_h == 0
-    cap = cap_bh // band_h
-    acc_dtype = jnp.float32 if jnp.issubdtype(f_mid.dtype, jnp.floating) else jnp.int32
+    ph = band_h + 2 * fuse_k
+    assert f_patch.shape[1] == tile_w + 2 * fuse_k
+    assert f_patch.shape[0] % ph == 0
+    cap = f_patch.shape[0] // ph
+    acc_dtype = jnp.float32 if jnp.issubdtype(f_patch.dtype, jnp.floating) else jnp.int32
     assert r_mid.dtype == acc_dtype and d_mid.dtype == jnp.int32
+    assert r_mid.shape == d_mid.shape == (cap * band_h, tile_w)
     if base.shape == (1, 1):
         base = jnp.broadcast_to(base, (cap, 1))
     assert base.shape == (cap, 1)
 
-    halo_spec = pl.BlockSpec((fuse_k, w), lambda i: (i, 0))
-    mid_spec = pl.BlockSpec((band_h, w), lambda i: (i, 0))
+    patch_spec = pl.BlockSpec((ph, tile_w + 2 * fuse_k), lambda i: (i, 0))
+    mid_spec = pl.BlockSpec((band_h, tile_w), lambda i: (i, 0))
     flag_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
 
     kern = functools.partial(
-        _qdt_kernel, fuse_k=fuse_k, band_h=band_h, acc_dtype=acc_dtype,
-        bands_per_image=cap, pin_halos=False,
+        _qdt_compact_kernel, fuse_k=fuse_k, band_h=band_h, tile_w=tile_w,
+        acc_dtype=acc_dtype,
     )
     return pl.pallas_call(
         kern,
         grid=(cap,),
-        in_specs=[flag_spec, flag_spec, halo_spec, mid_spec, halo_spec,
-                  mid_spec, mid_spec],
+        in_specs=[flag_spec, flag_spec, patch_spec, mid_spec, mid_spec],
         out_specs=[mid_spec, mid_spec, mid_spec, flag_spec],
         out_shape=[
-            jax.ShapeDtypeStruct((cap_bh, w), f_mid.dtype),
-            jax.ShapeDtypeStruct((cap_bh, w), acc_dtype),
-            jax.ShapeDtypeStruct((cap_bh, w), jnp.int32),
+            jax.ShapeDtypeStruct((cap * band_h, tile_w), f_patch.dtype),
+            jax.ShapeDtypeStruct((cap * band_h, tile_w), acc_dtype),
+            jax.ShapeDtypeStruct((cap * band_h, tile_w), jnp.int32),
             jax.ShapeDtypeStruct((cap, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(base, valid, f_top, f_mid, f_bot, r_mid, d_mid)
+    )(base, valid, f_patch, r_mid, d_mid)

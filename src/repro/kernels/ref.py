@@ -3,7 +3,8 @@
 The reference implementations live in ``repro.core.morphology`` /
 ``repro.core.operators`` (they ARE the paper's definitions, Eq. 1-20);
 this module re-exports them under kernel-aligned names so each kernel
-test reads ``kernel_out ≈ ref.<name>(...)``.
+test reads ``kernel_out == ref.<name>(...)`` — bit-exact, per the
+convention in ``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 

@@ -46,10 +46,11 @@ TPU/Pallas port, one stage per module:
     --json``.
 
 The convergence-driven operators routed through ``kernels.ops`` all run
-on the shared active-band requeue driver (``_drive_scheduler``), so a
-converged image in a served stack stops costing band work while its
-batch-mates iterate — the serving-level payoff of the paper's Alg. 4
-requeue mechanism.
+on the shared active-tile requeue driver (``_drive_scheduler``; the
+scheduler lifecycle and the ChainPlan contract it schedules against are
+documented in ``docs/ARCHITECTURE.md``), so a converged image in a
+served stack stops costing tile work while its batch-mates iterate —
+the serving-level payoff of the paper's Alg. 4 requeue mechanism.
 """
 from repro.serve import registry
 from repro.serve.bucketer import BucketKey, Ticket, bucket_hw, canonical_batch

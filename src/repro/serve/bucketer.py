@@ -12,8 +12,9 @@ full ``(N, H, W)`` stacks through one compiled program:
   with sentinel images to the next power of two ≤ ``max_batch``, so the
   handful of canonical batch shapes reuse compiled programs instead of
   recompiling per occupancy.  Sentinels are filled with the op's
-  absorbing identity — under the active-band scheduler they converge in
-  one chunk and stop costing band work.
+  absorbing identity — under the active-tile requeue scheduler (see
+  ``docs/ARCHITECTURE.md``) they converge in one chunk and stop costing
+  work.
 * **deadline flush**: every queue records its oldest enqueue time; the
   service launches a bucket when it reaches ``max_batch`` *or* its
   oldest request has waited ``max_delay_ms`` — a straggler request

@@ -7,6 +7,10 @@ their fusion schedule per bucket; ``entry.plan.key`` exposes it for
 introspection/metrics).  Eviction is least-recently-used; ``warm``
 prefill builds entries without counting toward the hit/miss statistics
 so steady-state hit-rate stays meaningful.
+
+The ChainPlan fields that make up ``plan.key`` — i.e. exactly what a
+compiled schedule is identified by — are documented in
+``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 

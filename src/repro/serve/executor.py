@@ -13,6 +13,9 @@ its original (H, W) (dropping the pad-to-bucket canonicalization),
 ``OpSpec.finalize`` runs per request (e.g. DOME's ``f - hmax``), the
 ticket is fulfilled, and sentinel slots (batch padding up to the
 canonical size) are discarded.
+
+Where this sits in the pipeline (registry → bucketer → cache →
+executor) is mapped in ``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 

@@ -13,6 +13,7 @@ O(1) memory per bucket while ``requests`` counts the full history.
 ``benchmarks/run.py`` (``name,us_per_call,derived`` rows and the
 ``--json`` name → us_per_call mapping), so serving throughput lands in
 the same machine-readable perf trajectory as the kernel benchmarks.
+Every emitted field is documented in ``docs/BENCHMARKS.md``.
 """
 from __future__ import annotations
 

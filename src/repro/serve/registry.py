@@ -23,7 +23,8 @@ Each :class:`OpSpec` describes the three pipeline stages:
 ``pad_fills(params)`` names the absorbing fill ("hi"/"lo") used for
 pad-to-bucket canonicalization of each canonical input; ops with
 ``pad_safe=False`` are bucketed by exact shape instead (see the hooks'
-docstrings for the exactness argument).
+docstrings for the exactness argument, and ``docs/ARCHITECTURE.md``
+for the repo-wide bit-exactness convention it instantiates).
 """
 from __future__ import annotations
 

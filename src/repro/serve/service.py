@@ -13,7 +13,8 @@ Callers that want strict deadline behaviour between submissions pump
 ``poll()`` themselves (there is no background thread — see the ROADMAP
 follow-up); ``flush()`` force-launches everything and drains the
 pipeline, and ``Ticket.result()`` drives whatever its request still
-needs.
+needs.  The layer map this front-end sits on top of is documented in
+``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
@@ -174,7 +175,7 @@ class Service:
     def _stage(self, spec, key: BucketKey, requests, n_slots: int) -> tuple:
         """Host staging: pad each canonical input to the bucket shape and
         stack; sentinel slots keep the absorbing fill (they converge in
-        one chunk under the active-band scheduler)."""
+        one chunk under the active-tile scheduler)."""
         h, w = key.hw
         dtype = np.dtype(key.dtype)
         n_inputs = spec.n_inputs or spec.arity

@@ -1,0 +1,132 @@
+"""Docs smoke tests: the prose in ``docs/*.md`` (and the README) must
+not rot.
+
+Two classes of machine-checkable claims are extracted from the
+markdown:
+
+* backticked ``file.py:symbol`` references (the convention
+  ``docs/ARCHITECTURE.md`` declares) — the file must exist and the
+  symbol must be defined at its top level (one ``Class.member`` dot
+  level is resolved into class bodies);
+* commands inside fenced shell blocks — every ``python -m module`` /
+  ``python path.py`` invocation must name a module/file that exists.
+
+Marked ``docs`` so documentation checks can be run alone:
+``pytest -m docs``.
+"""
+import ast
+import pathlib
+import re
+
+import pytest
+
+pytestmark = pytest.mark.docs
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(REPO.glob("docs/*.md")) + [REPO / "README.md"]
+
+# a path-looking token ending in .py/.md, optionally with :symbol
+_REF = re.compile(
+    r"(?P<path>[A-Za-z0-9_\-./]+\.(?:py|md))(?::(?P<sym>[A-Za-z_][\w.]*))?"
+)
+_BACKTICK = re.compile(r"`([^`\n]+)`")
+_FENCE = re.compile(r"^```(\w*)\s*$")
+_CMD = re.compile(r"^(?:PYTHONPATH=\S+\s+)?python(?:3)?\s+(?P<rest>.+)$")
+_SHELL_LANGS = {"", "bash", "sh", "shell", "console"}
+
+
+def _doc_ids():
+    return [p.relative_to(REPO).as_posix() for p in DOC_FILES]
+
+
+def test_docs_exist():
+    assert (REPO / "docs" / "ARCHITECTURE.md").is_file()
+    assert (REPO / "docs" / "BENCHMARKS.md").is_file()
+    assert (REPO / "README.md").is_file()
+
+
+def _symbol_names(tree: ast.Module):
+    """Top-level names and one dotted level into class bodies."""
+    names = set()
+
+    def targets(node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            yield node.name
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    yield t.id
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            yield node.target.id
+
+    for node in tree.body:
+        for name in targets(node):
+            names.add(name)
+        if isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                for name in targets(sub):
+                    names.add(f"{node.name}.{name}")
+    return names
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=_doc_ids())
+def test_docs_symbol_references_exist(doc):
+    refs = []
+    for span in _BACKTICK.findall(doc.read_text()):
+        m = _REF.search(span)
+        if m:
+            refs.append((m.group("path"), m.group("sym")))
+    assert refs, f"{doc.name}: no file references found (convention broken?)"
+    missing = []
+    for path, sym in refs:
+        target = REPO / path
+        if not target.is_file():
+            missing.append(f"{path} (file missing)")
+            continue
+        if sym is None or target.suffix != ".py":
+            continue
+        tree = ast.parse(target.read_text())
+        if sym not in _symbol_names(tree):
+            missing.append(f"{path}:{sym} (symbol missing)")
+    assert not missing, f"{doc.name}: stale references: {missing}"
+
+
+def _fenced_commands(text: str):
+    """Yield python invocations from shell-language fenced blocks."""
+    lang = None
+    for line in text.splitlines():
+        fence = _FENCE.match(line.strip())
+        if fence:
+            lang = fence.group(1).lower() if lang is None else None
+            continue
+        if lang is None or lang not in _SHELL_LANGS:
+            continue
+        m = _CMD.match(line.strip())
+        if m:
+            yield m.group("rest")
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=_doc_ids())
+def test_docs_fenced_commands_resolve(doc):
+    checked = 0
+    for rest in _fenced_commands(doc.read_text()):
+        args = rest.split()
+        if args[0] == "-m":
+            mod = args[1]
+            mod_path = REPO / (mod.replace(".", "/") + ".py")
+            pkg_path = REPO / mod.replace(".", "/") / "__init__.py"
+            if not (mod_path.is_file() or pkg_path.is_file()):
+                # external module (e.g. pytest): must be importable
+                import importlib.util
+                top = mod.split(".")[0]
+                assert importlib.util.find_spec(top) is not None, (
+                    f"{doc.name}: `python -m {mod}` resolves nowhere")
+        else:
+            script = args[0]
+            assert (REPO / script).is_file(), (
+                f"{doc.name}: `python {script}` names a missing file")
+        checked += 1
+    if doc.name != "ARCHITECTURE.md":  # architecture has no run commands
+        assert checked, f"{doc.name}: no fenced commands found"

@@ -1,0 +1,188 @@
+"""2-D (row band × column tile) scheduling: planning policy, edge
+cases, and bit-exactness of the tiled paths against the dense
+references.
+
+The tile axis must be invisible in the outputs — every path (tiled full
+grid, tiled compaction, batched stacks converging raggedly) pins the
+Pallas driver against the pure-jnp ``core.morphology`` oracles with
+``assert_array_equal`` — while the stats must show the 2-D grid
+actually skips the column strips a row-band scheduler re-processes.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import morphology as M
+from repro.core import operators as OPS
+from repro.core.chain import plan_chain
+from repro.kernels import ops
+
+
+def _reference(marker, mask, op):
+    if op == "erode":
+        return M.erode_reconstruct(marker, mask)
+    return M.dilate_reconstruct(marker, mask)
+
+
+def _vertical_corridor(h, w, col_lo, col_hi):
+    """Mask with one narrow vertical corridor + the seed marker at its
+    top — the worst case for a row-band scheduler (every full-width
+    band stays active until its slice of the corridor converges)."""
+    mask = np.zeros((h, w), np.uint8)
+    mask[8 : h - 8, col_lo:col_hi] = 200
+    marker = np.zeros((h, w), np.uint8)
+    marker[8, col_lo + 2] = 200
+    return np.minimum(marker, mask), mask
+
+
+# ---------------------------------------------------------------------------
+# planning policy: auto-tiling and the row-only fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_plan_auto_tiles_convergent():
+    p = plan_chain(256, 640, np.uint8, None, convergent=True)
+    assert p.tile_w and p.n_tiles >= 2
+    assert p.tile_w % p.fuse_k == 0 and p.width_pad % p.tile_w == 0
+    assert p.total_tiles == p.total_bands * p.n_tiles
+    # key must distinguish tiled from row-only schedules
+    p_row = plan_chain(256, 640, np.uint8, None, convergent=True, tile_w=0)
+    assert p.key != p_row.key
+    # non-convergent plans never auto-tile
+    assert plan_chain(256, 640, np.uint8, 8).tile_w == 0
+
+
+def test_plan_fuse_k_gt_tile_w_falls_back_row_only():
+    p = plan_chain(256, 256, np.uint8, None, convergent=True, tile_w=16)
+    assert p.fuse_k == 32  # uint8 planning default
+    assert p.tile_w == 0 and p.n_tiles == 1  # 16 < fuse_k: row-only
+    # compact capacity stays in band units on the fallback
+    assert p.compact_capacity <= p.total_bands
+
+
+def test_plan_single_tile_wide_falls_back_row_only():
+    # image narrower than two lane-groups: nothing to split
+    assert plan_chain(256, 96, np.uint8, None, convergent=True).tile_w == 0
+    # a requested tile as wide as the image is row-only too
+    assert plan_chain(256, 256, np.uint8, None, convergent=True,
+                      tile_w=256).tile_w == 0
+
+
+def test_plan_tile_validation():
+    from repro.core.chain import ChainPlan
+    with pytest.raises(ValueError, match="multiple of"):
+        ChainPlan(32, 32, 256, 128, 4, 1, tile_w=48)   # 48 % fuse_k != 0
+    with pytest.raises(ValueError, match="width_pad"):
+        ChainPlan(32, 32, 384, 128, 4, 1, tile_w=256)  # 384 % 256 != 0
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness of the tiled paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["erode", "dilate"])
+def test_tiled_reconstruct_exact(rng, op):
+    shape = (160, 250)  # pads to 160 × 256 → 2 column tiles
+    mask = rng.integers(20, 180, shape).astype(np.uint8)
+    if op == "erode":
+        marker = np.full(shape, 255, np.uint8)
+        marker[37, 61] = mask[37, 61]
+    else:
+        marker = np.zeros(shape, np.uint8)
+        marker[37, 61] = 200
+        marker = np.minimum(marker, mask)
+    plan = plan_chain(*shape, np.uint8, None, n_images_resident=2,
+                      convergent=True)
+    assert plan.n_tiles == 2  # the tiled path actually runs
+    out = ops.reconstruct(jnp.asarray(marker), jnp.asarray(mask), op,
+                          "pallas", plan=plan)
+    want = _reference(jnp.asarray(marker), jnp.asarray(mask), op)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_tiled_compaction_branch_exact():
+    """Corridor confined to one tile column: activity collapses below
+    the compact threshold, so the patch-gather compact path runs on the
+    2-D grid and must stay bit-exact (including the cached mask-patch
+    gather)."""
+    marker, mask = _vertical_corridor(256, 640, 320, 336)
+    plan = plan_chain(256, 640, np.uint8, None, n_images_resident=2,
+                      convergent=True)
+    assert plan.n_tiles >= 4
+    out, stats = ops.reconstruct_with_stats(
+        jnp.asarray(marker), jnp.asarray(mask), "dilate", "pallas",
+        plan=plan)
+    want = M.dilate_reconstruct(jnp.asarray(marker), jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    per_chunk = np.asarray(stats.active_per_chunk)[: int(stats.chunks)]
+    assert (per_chunk <= plan.compact_capacity).any()  # compaction ran
+
+
+def test_tiled_qdt_exact(rng):
+    f = rng.integers(0, 255, (160, 250)).astype(np.uint8)
+    plan = plan_chain(160, 250, np.uint8, None, n_images_resident=3,
+                      convergent=True)
+    assert plan.n_tiles == 2
+    d, r = ops.qdt_planes(jnp.asarray(f), backend="pallas", plan=plan)
+    dw, rw = OPS.qdt_raw(jnp.asarray(f))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dw))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(rw))
+
+
+def test_tiled_ragged_batched_stack(rng):
+    """Images converging at different tile counts in one stack: a
+    trivially-converged image, a corridor image whose wavefront lives in
+    one tile column, and a busy full-frame image.  Each must match its
+    solo reference exactly (per-image halo pinning on both axes, and
+    per-image QDT-style chunk counters on the reconstruction side)."""
+    H, W = 128, 256
+    mask_full = np.full((H, W), 200, np.uint8)
+    done = mask_full.copy()
+    corridor_m, corridor_k = _vertical_corridor(H, W, 130, 140)
+    busy_k = rng.integers(20, 220, (H, W)).astype(np.uint8)
+    busy_m = np.zeros((H, W), np.uint8)
+    busy_m[64, 128] = 255
+    busy_m = np.minimum(busy_m, busy_k)
+
+    markers = jnp.asarray(np.stack([done, corridor_m, busy_m]))
+    masks = jnp.asarray(np.stack([mask_full, corridor_k, busy_k]))
+    plan = plan_chain(H, W, np.uint8, None, n_images_resident=2,
+                      n_images=3, convergent=True)
+    assert plan.n_tiles == 2
+    out = ops.reconstruct(markers, masks, "dilate", "pallas", plan=plan)
+    for i in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(out[i]),
+            np.asarray(M.dilate_reconstruct(markers[i], masks[i])))
+
+
+# ---------------------------------------------------------------------------
+# the scheduling win: vertical wavefronts skip column strips
+# ---------------------------------------------------------------------------
+
+
+def test_vertical_wavefront_fewer_tile_executions():
+    """Acceptance criterion: on a narrow vertical corridor the 2-D
+    scheduler executes fewer tiles than the row-band scheduler on the
+    same input.  Row bands are normalized to tile-executions (one band
+    spans ``n_tiles`` tiles of area)."""
+    marker, mask = _vertical_corridor(256, 640, 320, 336)
+    mj, kj = jnp.asarray(marker), jnp.asarray(mask)
+    tiled = plan_chain(256, 640, np.uint8, None, n_images_resident=2,
+                       convergent=True)
+    row = plan_chain(256, 640, np.uint8, None, n_images_resident=2,
+                     convergent=True, tile_w=0)
+    assert tiled.n_tiles >= 4 and row.n_tiles == 1
+    out_t, st = ops.reconstruct_with_stats(mj, kj, "dilate", "pallas",
+                                           plan=tiled)
+    out_r, sr = ops.reconstruct_with_stats(mj, kj, "dilate", "pallas",
+                                           plan=row)
+    want = M.dilate_reconstruct(mj, kj)
+    np.testing.assert_array_equal(np.asarray(out_t), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(out_r), np.asarray(want))
+    tiled_cells = int(st.active_band_sum)
+    row_cells = int(sr.active_band_sum) * tiled.n_tiles
+    assert tiled_cells < row_cells, (
+        f"2-D scheduler did not skip column strips: {tiled_cells} "
+        f"tile-executions vs {row_cells} row-band-equivalents")
