@@ -1,0 +1,98 @@
+"""Expression-pipeline benchmarks: what the compile step buys.
+
+Two questions, answered in the standard ``name,us_per_call,derived``
+row contract:
+
+* **Fused vs unfused ASF** — the same ASF_s chain executed as one
+  compiled expression (one pad, 2s+1 fused launches, masked refills
+  between opposite-op runs) vs the legacy per-stage path (4s separate
+  erode/dilate programs, each paying its own pad + launch + crop).  The
+  derived column carries both static ``Executable.stats()`` counts, so
+  the round-trip reduction is visible next to the wall-clock ratio.
+* **Compile-cache hit rate** — the steady-state cost of routing every
+  legacy sugar call through ``repro.api.compile`` (a cache lookup), and
+  the hit rate over a replayed mixed operator workload.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import timeit, timeit_host
+from repro import api
+from repro.data.images import blobs
+
+
+def _stagewise_asf(f, s, backend):
+    """Legacy path: one compiled program per elementary stage."""
+    from repro.kernels.ops import morph_chain
+
+    out = f
+    for k in range(1, s + 1):
+        out = morph_chain(out, k, "erode", backend)   # γ_k
+        out = morph_chain(out, k, "dilate", backend)
+        out = morph_chain(out, k, "dilate", backend)  # φ_k
+        out = morph_chain(out, k, "erode", backend)
+    return out
+
+
+def run(quick: bool = True):
+    size = 128 if quick else 512
+    s = 2 if quick else 5
+    f = jnp.asarray(blobs(size, size, np.uint8))
+    rows = []
+
+    for backend in ("xla", "pallas") if quick else ("pallas",):
+        exe = api.compile(api.asf_expr(s), f.shape, f.dtype, backend)
+        st = exe.stats()
+        t_fused = timeit(exe, f, repeats=2)
+        t_stage = timeit(lambda: _stagewise_asf(f, s, backend), repeats=2)
+        rows.append({
+            "name": f"pipeline/ASF{s}_fused_{backend}/{size}px",
+            "us_per_call": t_fused * 1e6,
+            "derived": (f"pads={st['pads']} launches={st['launches']} "
+                        f"refills={st['refills']} "
+                        f"chain={st['fused_chain_len']}"),
+        })
+        rows.append({
+            "name": f"pipeline/ASF{s}_stagewise_{backend}/{size}px",
+            "us_per_call": t_stage * 1e6,
+            "derived": (f"pads={4 * s} launches={4 * s} "
+                        f"ratio={t_stage / t_fused:.2f}x"),
+        })
+
+    # opening-by-reconstruction: chain + scheduler in one padded program
+    exe = api.compile(api.opening_by_reconstruction_expr(8), f.shape,
+                      f.dtype, "pallas")
+    st = exe.stats()
+    rows.append({
+        "name": f"pipeline/OBR8_fused_pallas/{size}px",
+        "us_per_call": timeit(exe, f, repeats=2) * 1e6,
+        "derived": f"pads={st['pads']} launches={st['launches']}",
+    })
+
+    # compile-cache steady state: replay a mixed workload through the
+    # legacy sugar (every call routes through api.compile)
+    api.clear_cache()
+    workload = [api.hmax_expr(40.0), api.dome_expr(40.0),
+                api.hfill_expr(), api.asf_expr(s),
+                api.opening_by_reconstruction_expr(4)]
+    for expr in workload:            # cold: compile misses
+        api.compile(expr, f.shape, f.dtype, "xla")
+    t_hit = timeit_host(
+        lambda: [api.compile(e, f.shape, f.dtype, "xla") for e in workload],
+        repeats=3,
+    ) / len(workload)
+    cs = api.cache_stats()
+    rows.append({
+        "name": "pipeline/compile_cache_lookup",
+        "us_per_call": t_hit * 1e6,
+        "derived": (f"hit_rate={cs['hit_rate']:.2f} hits={cs['hits']} "
+                    f"misses={cs['misses']} entries={cs['entries']}"),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

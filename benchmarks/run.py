@@ -20,6 +20,9 @@ Modules:
   serve      repro.serve micro-batching: single-request latency vs
              batched throughput across bucket sizes (occupancy, cache
              hit-rate and FPS in the derived column)
+  pipeline   repro.api expression pipeline: fused vs per-stage ASF
+             (pad/launch round-trip counts from Executable.stats())
+             and the compile-cache hit rate
 """
 from __future__ import annotations
 
@@ -28,8 +31,8 @@ import json
 import pathlib
 
 from benchmarks import (bench_chain, bench_crossover, bench_dims,
-                        bench_operators, bench_roofline, bench_serve,
-                        bench_table3)
+                        bench_operators, bench_pipeline, bench_roofline,
+                        bench_serve, bench_table3)
 from benchmarks.common import emit
 
 MODULES = {
@@ -40,6 +43,7 @@ MODULES = {
     "table3": bench_table3,
     "roofline": bench_roofline,
     "serve": bench_serve,
+    "pipeline": bench_pipeline,
 }
 
 

@@ -12,7 +12,11 @@ paper's FPS / MPx-per-s headline numbers).
 The service is declared as data (``SERVICE``): operator names + params
 resolved through the registry.  ``--mixed-sizes`` varies frame shapes to
 exercise pad-to-bucket canonicalization; frames of different sizes that
-round to the same bucket share one compiled program.
+round to the same bucket share one compiled program.  Buckets are keyed
+on the *lowered run signature*, so HMAX, DOME and RAOBJ — all one
+dilate-reconstruction after their prepare stages — co-batch into a
+single ``rec:dilate`` bucket (cross-op packing; watch its occupancy in
+the report).
 """
 import argparse
 import json

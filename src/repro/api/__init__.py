@@ -1,0 +1,40 @@
+"""repro.api — the unified morphology expression API.
+
+compose → plan → compile → execute::
+
+    from repro.api import E, compile
+
+    f    = E.input("f")
+    expr = E.reconstruct(E.sat_sub(f, 40), f, op="dilate")   # HMAX_40
+    exe  = compile(expr, image.shape, image.dtype, "pallas")
+    out  = exe(image)            # (H, W) or (N, H, W), bit-exact
+    exe.stats()                  # pads / launches / refills / plan
+
+Layers (each module's docstring carries its local contract):
+
+- ``expr`` — composable graph nodes (``E.erode``, ``E.reconstruct``,
+  marker derivations, pointwise arithmetic, ``>>`` piping).
+- ``lower`` — graph → three-phase :class:`~repro.api.lower.Program`
+  (prepare / padded run segments with chain fusion / finalize).
+- ``compile`` — binds a program to (shape, dtype, backend) under one
+  shared :class:`~repro.core.chain.ChainPlan`, LRU-cached on the graph.
+- ``executable`` — runs the program: one pad, fused segments, one crop.
+
+The legacy surfaces are sugar over this: ``core/operators.py`` builds
+these graphs, ``kernels/ops.py``'s public wrappers route through
+``compile``, and ``repro.serve`` derives its pipeline stages and bucket
+keys from the lowered programs.
+"""
+from repro.api.compile import cache_stats, clear_cache, compile
+from repro.api.executable import Executable
+from repro.api.expr import (E, Expr, Pipe, asf_expr, dome_expr, hfill_expr,
+                            hmax_expr, opening_by_reconstruction_expr,
+                            qdt_l1_expr, raobj_expr)
+from repro.api.lower import Program, lower
+
+__all__ = [
+    "E", "Expr", "Pipe", "Program", "Executable",
+    "compile", "lower", "cache_stats", "clear_cache",
+    "hmax_expr", "dome_expr", "hfill_expr", "raobj_expr",
+    "opening_by_reconstruction_expr", "asf_expr", "qdt_l1_expr",
+]

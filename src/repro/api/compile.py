@@ -1,0 +1,139 @@
+"""``compile(expr, shape, dtype, backend)`` — the one entry that turns
+an expression graph into an :class:`~repro.api.executable.Executable`.
+
+Compilation is lowering (``repro.api.lower``) plus schedule binding:
+one :class:`~repro.core.chain.ChainPlan` is derived for the whole
+program — convergent when any reconstruction/QDT segment is present,
+with the residency of the hungriest segment — so every segment of a
+composite operator (ASF's fused chains, opening-by-reconstruction's
+erosion + reconstruction) shares one padded layout.
+
+Compiled executables are cached in a module-level LRU keyed on the
+expression graph itself plus the binding ``(shape, dtype, backend,
+plan, max_chunks)`` — an :class:`~repro.api.expr.Expr` is a frozen
+hashable dataclass, so the graph *is* the key.  ``cache_stats()``
+exposes hit/miss counters (surfaced by ``benchmarks/run.py --only
+pipeline``); the legacy operator sugar in ``core/operators.py`` and
+``kernels/ops.py`` goes through this cache on every call, which is what
+makes the thin-wrapper rebuild free in steady state.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+
+import jax.numpy as jnp
+
+from repro.api.executable import Executable
+from repro.api.expr import Expr, Pipe
+from repro.api.lower import lower
+from repro.core.backend import canonicalize_backend
+from repro.core.chain import plan_chain
+
+#: Executables kept resident; enough for every (op, bucket) pair of a
+#: busy service plus direct-use traffic.
+CACHE_CAPACITY = 512
+
+_cache: collections.OrderedDict = collections.OrderedDict()
+_lock = threading.Lock()
+_hits = 0
+_misses = 0
+
+
+def compile(expr: Expr, shape, dtype, backend: str | None = None, *,
+            plan=None, max_chunks: int | None = None) -> Executable:
+    """Lower ``expr`` and bind it to a concrete (shape, dtype, backend).
+
+    ``shape`` is ``(H, W)`` (the executable then takes and returns 2-D
+    arrays) or ``(N, H, W)`` for batched execution.  ``plan`` overrides
+    the derived :class:`~repro.core.chain.ChainPlan` (Pallas backend
+    only; validated against the shape); ``max_chunks`` caps the
+    convergence-driven segments' K-chunk iterations.
+    """
+    if isinstance(expr, Pipe):
+        raise TypeError(
+            "got an unapplied pipe — apply it to an input first, e.g. "
+            "E.input('f') >> E.erode(4)"
+        )
+    if not isinstance(expr, Expr):
+        raise TypeError(f"expected an Expr, got {type(expr).__name__}")
+    backend = canonicalize_backend(backend)
+    shape = tuple(int(s) for s in shape)
+    if len(shape) == 2:
+        shape3, was_2d = (1, *shape), True
+    elif len(shape) == 3:
+        shape3, was_2d = shape, False
+    else:
+        raise ValueError(f"shape must be (H, W) or (N, H, W), got {shape}")
+    dtype = jnp.dtype(dtype)
+
+    global _hits, _misses
+    key = (expr, shape3, was_2d, str(dtype), backend, plan, max_chunks)
+    with _lock:
+        exe = _cache.get(key)
+        if exe is not None:
+            _hits += 1
+            _cache.move_to_end(key)
+            return exe
+        _misses += 1
+
+    exe = _build(expr, shape3, was_2d, dtype, backend, plan, max_chunks)
+    with _lock:
+        _cache[key] = exe
+        while len(_cache) > CACHE_CAPACITY:
+            _cache.popitem(last=False)
+    return exe
+
+
+def _build(expr, shape3, was_2d, dtype, backend, plan, max_chunks):
+    program = lower(expr)
+    n, h, w = shape3
+    if plan is not None:
+        # validate an explicit plan against the bound shape regardless
+        # of backend — a mismatched schedule is a caller bug even when
+        # the jnp engine would not use it
+        if plan.n_images != n:
+            raise ValueError(
+                f"plan.n_images={plan.n_images} != batch size {n}"
+            )
+        if plan.height_pad < h or plan.width_pad < w:
+            raise ValueError(
+                f"plan pads ({plan.height_pad}, {plan.width_pad}) "
+                f"smaller than image ({h}, {w})"
+            )
+    if backend == "pallas" and program.kernel_segments:
+        if plan is None:
+            lens = [s.param("n") for s in program.segments
+                    if s.kind in ("chain", "geodesic")]
+            plan = plan_chain(
+                h, w, dtype,
+                None if program.convergent else (max(lens) if lens else None),
+                n_images_resident=program.n_resident,
+                n_images=n,
+                convergent=program.convergent,
+            )
+    else:
+        plan = None  # the jnp oracle engine runs unpadded
+    return Executable(program, shape3, dtype, backend, plan, max_chunks,
+                      was_2d)
+
+
+def cache_stats() -> dict:
+    """Compile-cache counters (the pipeline benchmark's hit-rate row)."""
+    with _lock:
+        total = _hits + _misses
+        return {
+            "entries": len(_cache),
+            "capacity": CACHE_CAPACITY,
+            "hits": _hits,
+            "misses": _misses,
+            "hit_rate": _hits / total if total else 0.0,
+        }
+
+
+def clear_cache() -> None:
+    global _hits, _misses
+    with _lock:
+        _cache.clear()
+        _hits = 0
+        _misses = 0

@@ -1,0 +1,313 @@
+"""Executable: a compiled expression bound to (shape, dtype, backend).
+
+The run phase executes the lowered :class:`~repro.api.lower.Program`
+as **one padded program**: every canonical input is padded to the
+shared :class:`~repro.core.chain.ChainPlan` exactly once, all kernel
+segments run on the vertically stacked ``(N·H_pad, W_pad)`` working
+arrays (chains via ``chain_step`` scans, convergence-driven segments
+via the requeue scheduler in ``kernels/ops.py``), and outputs are
+cropped exactly once.  Between segments that need a different absorbing
+identity in the pad region, the lowered ``refill`` segments apply a
+masked fill in place of the legacy crop → re-pad → re-plan round-trip.
+
+``backend="xla"`` executes the same program with the pure-jnp oracle
+bodies on unpadded arrays — bit-exact with the Pallas path by the
+repo's exactness convention (see ``docs/ARCHITECTURE.md``).
+
+``Executable.key`` — the lowered run signature + bound shape/dtype/
+backend + ``plan.key`` — is simultaneously the compile-cache key and
+the ``repro.serve`` bucket/cache identity, which is what lets different
+operators with identical run phases (HMAX vs DOME) share one compiled
+bucket program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.lower import Program, eval_pointwise
+from repro.core import morphology as M
+from repro.core import operators as OPS
+from repro.kernels.common import ident_for
+from repro.kernels.erode_chain import chain_step
+from repro.kernels.geodesic_chain import geodesic_chain_step
+
+#: pad-fill name → the op whose lattice identity it is
+_FILL_OP = {"hi": "erode", "lo": "dilate"}
+
+
+def _fill_value(fill: str, dtype):
+    return ident_for(_FILL_OP[fill], dtype)
+
+
+class Executable:
+    """A lowered program bound to a concrete (N, H, W)/dtype/backend.
+
+    Call it with the expression's input arrays (in
+    ``program.input_names`` order) to run prepare → run → finalize;
+    ``run_batch`` runs the run phase alone on canonical inputs (the
+    serve executor's per-bucket program).  ``stats()`` reports the
+    static pad/launch/refill accounting of the compiled program — the
+    fusion wins of the expression API are visible there.
+    """
+
+    def __init__(self, program: Program, shape3: tuple, dtype, backend: str,
+                 plan, max_chunks: int | None, was_2d: bool):
+        self.program = program
+        self.n_images, self.height, self.width = shape3
+        self.dtype = jnp.dtype(dtype)
+        self.backend = backend
+        self.plan = plan
+        self.was_2d = was_2d
+        if plan is not None:
+            k = plan.fuse_k
+            self._max_chunks_rec = (
+                max_chunks if max_chunks is not None
+                else (self.height * self.width) // k + 2
+            )
+            self._max_chunks_qdt = (
+                max_chunks if max_chunks is not None
+                else max(self.height, self.width) // k + 2
+            )
+        self.key = (
+            program.run_sig, shape3, str(self.dtype), backend,
+            plan.key if plan is not None else None,
+        )
+
+    # -- public ------------------------------------------------------------
+
+    def __call__(self, *arrays, **named):
+        names = self.program.input_names
+        if named:
+            if arrays:
+                raise TypeError("pass inputs positionally or by name, "
+                                "not both")
+            try:
+                arrays = tuple(named.pop(n) for n in names)
+            except KeyError as e:
+                raise TypeError(f"missing input {e.args[0]!r}") from None
+            if named:
+                raise TypeError(f"unknown inputs {sorted(named)} "
+                                f"(expected {list(names)})")
+        if len(arrays) != len(names):
+            raise TypeError(
+                f"expression takes {len(names)} input(s) {list(names)}, "
+                f"got {len(arrays)}"
+            )
+        arrays = tuple(self._check(jnp.asarray(a)) for a in arrays)
+        outs = self._call_fn(*arrays)
+        return outs[0] if self.program.n_outputs == 1 else outs
+
+    def run_batch(self, *canonical):
+        """Run phase only: canonical (N, H, W) inputs → cropped run
+        outputs (always a tuple) — the serve bucket entry point."""
+        return self._run_fn(*canonical)
+
+    def stats(self) -> dict:
+        """Static accounting of the compiled program (pads, launches,
+        refills): what the fusion tests and the pipeline benchmarks
+        count.  ``pads``/``crops`` are the pad/crop round-trips of one
+        execution; the legacy per-stage path pays one of each per
+        elementary operator stage."""
+        prog = self.program
+        return {
+            "backend": self.backend,
+            "pads": len(prog.run_fills) if self.plan is not None else 0,
+            "crops": len(prog.run_outputs) if self.plan is not None else 0,
+            "launches": len(prog.kernel_segments),
+            "refills": sum(1 for s in prog.segments if s.kind == "refill"),
+            "fused_chain_len": prog.fused_chain_len,
+            "plan_key": self.plan.key if self.plan is not None else None,
+        }
+
+    def __repr__(self):
+        return (f"Executable({self.program.sig_label()}, "
+                f"shape=({self.n_images}, {self.height}, {self.width}), "
+                f"dtype={self.dtype}, backend={self.backend!r})")
+
+    # -- internals ---------------------------------------------------------
+
+    def _check(self, a):
+        # 2-D executables keep 2-D arrays end-to-end (XLA:CPU handles a
+        # leading unit dim poorly); the pallas engine promotes privately.
+        want = ((self.height, self.width) if self.was_2d
+                else (self.n_images, self.height, self.width))
+        if tuple(a.shape) != want:
+            raise ValueError(
+                f"input shape {a.shape} does not match the compiled "
+                f"shape {want}"
+            )
+        if a.dtype != self.dtype:
+            raise ValueError(
+                f"input dtype {a.dtype} does not match the compiled "
+                f"dtype {self.dtype}"
+            )
+        return a
+
+    @functools.cached_property
+    def _call_fn(self):
+        return jax.jit(self._pipeline)
+
+    @functools.cached_property
+    def _run_fn(self):
+        return jax.jit(self._run_segments)
+
+    def _pipeline(self, *inputs3):
+        prog = self.program
+        env = dict(zip(prog.input_names, inputs3))
+        canonical = [eval_pointwise(e, env, {}, {}) for e in prog.prepare]
+        cropped = self._run_segments(*canonical)
+        kernel_vals = {
+            (node, i): cropped[j]
+            for j, (node, i, _) in enumerate(prog.kernel_outputs)
+        }
+        memo = {}
+        return tuple(eval_pointwise(e, env, kernel_vals, memo)
+                     for e in prog.result_exprs())
+
+    def _run_segments(self, *canonical):
+        if self.plan is None:
+            return self._run_xla(canonical)
+        return self._run_padded(canonical)
+
+    # -- xla engine: the jnp oracle bodies, unpadded -----------------------
+
+    def _run_xla(self, canonical):
+        vals = {}
+        for slot, x3 in enumerate(canonical):
+            vals[slot] = x3
+        for seg in self.program.segments:
+            if seg.kind == "refill":       # no padding exists to refill
+                vals[seg.dsts[0]] = vals[seg.srcs[0]]
+            elif seg.kind == "chain":
+                body = (M.erode3 if seg.param("op") == "erode"
+                        else M.dilate3)
+                vals[seg.dsts[0]] = jax.lax.fori_loop(
+                    0, seg.param("n"), lambda _, y, b=body: b(y),
+                    vals[seg.srcs[0]],
+                )
+            elif seg.kind == "geodesic":
+                step = (M.geodesic_erode if seg.param("op") == "erode"
+                        else M.geodesic_dilate)
+                vals[seg.dsts[0]] = step(vals[seg.srcs[0]],
+                                         vals[seg.srcs[1]], seg.param("n"))
+            elif seg.kind == "reconstruct":
+                rec = (M.erode_reconstruct if seg.param("op") == "erode"
+                       else M.dilate_reconstruct)
+                vals[seg.dsts[0]] = rec(vals[seg.srcs[0]], vals[seg.srcs[1]])
+            elif seg.kind == "qdt":
+                d, r = OPS.qdt_raw(vals[seg.srcs[0]])
+                vals[seg.dsts[0]], vals[seg.dsts[1]] = d, r
+            else:  # pragma: no cover
+                raise AssertionError(seg.kind)
+        return tuple(vals[s] for s in self.program.run_outputs)
+
+    # -- pallas engine: one padded program ---------------------------------
+
+    @functools.cached_property
+    def _image_mask(self):
+        """(TOTAL_H, W_pad) bool: True inside the real image regions."""
+        plan = self.plan
+        rows = (jnp.arange(plan.n_images * plan.height_pad)
+                % plan.height_pad) < self.height
+        cols = jnp.arange(plan.width_pad) < self.width
+        return rows[:, None] & cols[None, :]
+
+    def _run_padded(self, canonical):
+        from repro.kernels.ops import _pad, _stacked
+
+        plan = self.plan
+        vals = {}
+        for slot, (x, fill) in enumerate(
+                zip(canonical, self.program.run_fills)):
+            x3 = x[None] if x.ndim == 2 else x
+            vals[slot] = _stacked(_pad(x3, plan, _fill_value(fill, x.dtype)))
+        for seg in self.program.segments:
+            self._pallas_seg(seg, vals)
+        return tuple(self._crop2(vals[s]) for s in self.program.run_outputs)
+
+    def _pallas_seg(self, seg, vals):
+        from repro.kernels.ops import _scheduled_qdt, _scheduled_reconstruct
+
+        plan = self.plan
+        if seg.kind == "refill":
+            x2 = vals[seg.srcs[0]]
+            vals[seg.dsts[0]] = jnp.where(
+                self._image_mask, x2,
+                _fill_value(seg.param("fill"), x2.dtype),
+            )
+        elif seg.kind == "chain":
+            vals[seg.dsts[0]] = self._chain2(
+                vals[seg.srcs[0]], seg.param("op"), seg.param("n"))
+        elif seg.kind == "geodesic":
+            vals[seg.dsts[0]] = self._geodesic2(
+                vals[seg.srcs[0]], vals[seg.srcs[1]],
+                seg.param("op"), seg.param("n"))
+        elif seg.kind == "reconstruct":
+            out, _, _, _ = _scheduled_reconstruct(
+                vals[seg.srcs[0]], vals[seg.srcs[1]], plan,
+                seg.param("op"), self._max_chunks_rec, False,
+            )
+            vals[seg.dsts[0]] = out
+        elif seg.kind == "qdt":
+            _, r, d = _scheduled_qdt(vals[seg.srcs[0]], plan,
+                                     self._max_chunks_qdt)
+            vals[seg.dsts[0]], vals[seg.dsts[1]] = d, r
+        else:  # pragma: no cover
+            raise AssertionError(seg.kind)
+
+    def _chain2(self, x2, op, n):
+        from repro.kernels.ops import _INTERPRET, _stacked, _unstacked
+
+        plan = self.plan
+        full, rem = divmod(n, plan.fuse_k)
+        if full:
+            def chunk(x, _):
+                return chain_step(
+                    x, op=op, fuse_k=plan.fuse_k, band_h=plan.band_h,
+                    interpret=_INTERPRET, bands_per_image=plan.n_bands,
+                ), None
+            x2, _ = jax.lax.scan(chunk, x2, None, length=full)
+        if rem:
+            # jnp tail on the 3-D view: axis-polymorphic per image, and
+            # the pad region continues the identity-padded semantics.
+            body = M.erode3 if op == "erode" else M.dilate3
+            x3 = jax.lax.fori_loop(
+                0, rem, lambda _, y, b=body: b(y),
+                _unstacked(x2, self.n_images),
+            )
+            x2 = _stacked(x3)
+        return x2
+
+    def _geodesic2(self, f2, m2, op, n):
+        from repro.kernels.ops import _INTERPRET, _stacked, _unstacked
+
+        plan = self.plan
+        full, rem = divmod(n, plan.fuse_k)
+        if full:
+            def chunk(x, _):
+                y, _ = geodesic_chain_step(
+                    x, m2, op=op, fuse_k=plan.fuse_k, band_h=plan.band_h,
+                    interpret=_INTERPRET, bands_per_image=plan.n_bands,
+                )
+                return y, None
+            f2, _ = jax.lax.scan(chunk, f2, None, length=full)
+        if rem:
+            step = (M.geodesic_erode1 if op == "erode"
+                    else M.geodesic_dilate1)
+            m3 = _unstacked(m2, self.n_images)
+            f3 = jax.lax.fori_loop(
+                0, rem, lambda _, y: step(y, m3),
+                _unstacked(f2, self.n_images),
+            )
+            f2 = _stacked(f3)
+        return f2
+
+    def _crop2(self, x2):
+        from repro.kernels.ops import _unstacked
+
+        x3 = _unstacked(x2, self.n_images)
+        out = x3[:, : self.height, : self.width]
+        return out[0] if self.was_2d else out

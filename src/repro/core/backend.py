@@ -1,0 +1,64 @@
+"""The one place backend names are defined, validated and defaulted.
+
+Historically ``core/operators.py`` re-validated ``("xla", "pallas")`` by
+hand and defaulted to ``"xla"`` while ``kernels/ops.py`` kept its own
+``Backend`` alias and defaulted to ``"pallas"``.  Both now import from
+here, with one documented policy:
+
+**Default-backend policy.**  ``default_backend()`` resolves to the
+fastest *exact* backend for the platform: ``"pallas"`` when JAX is
+running natively on TPU (the fused kernels compile with
+``interpret=False``), ``"xla"`` everywhere else — on CPU the Pallas
+kernels only run in interpret mode, which is a bit-exactness/validation
+path, not a performance path.  Every public entry point that accepts a
+backend treats ``None`` as "apply the policy"; passing a backend
+explicitly always wins.  Both backends are bit-exact against the
+``core.morphology`` oracles, so the choice may only ever change *how*
+the result is computed, never the result.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+
+Backend = Literal["xla", "pallas"]
+
+#: Every backend name a public entry point accepts.
+BACKENDS: tuple[str, ...] = ("xla", "pallas")
+
+
+def default_backend() -> str:
+    """The policy default: native Pallas on TPU, XLA elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def canonicalize_backend(backend: str | None) -> str:
+    """Validate ``backend``, resolving ``None`` to the policy default."""
+    if backend is None:
+        return default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"backend must be one of {BACKENDS} (or None for the "
+            f"platform default), got {backend!r}"
+        )
+    return backend
+
+
+def warn_legacy_kwargs(entry: str, *names: str) -> None:
+    """Deprecation shim for the pre-expression call surfaces.
+
+    The legacy operator kwargs (``backend=``, ``max_iters=``,
+    ``max_chunks=``) keep working — the wrappers forward them into
+    compiled expressions — but new code should build an expression and
+    bind the backend at ``repro.api.compile`` time.
+    """
+    import warnings
+
+    warnings.warn(
+        f"{entry}: the {'/'.join(names)} argument(s) are deprecated; "
+        "build an expression and pass them to repro.api.compile("
+        "expr, shape, dtype, backend, ...) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )

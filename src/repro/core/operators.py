@@ -1,40 +1,91 @@
-"""Geodesic operators of the paper (§2, Eq. 6-20), built on core.morphology.
+"""Geodesic operators of the paper (§2, Eq. 6-20), defined as
+expression graphs over ``repro.api``.
 
-Every operator here is pure jnp/lax — it jits, shards (via the wrappers
-in core.distributed) and serves as the oracle for the Pallas-kernel
-fast path in repro.kernels.
+This module keeps two kinds of things:
 
-The reconstruction-based operators additionally accept
-``backend="pallas"`` to route their inner reconstruct through the fused
-kernel fast path (with active-band requeue scheduling); the default
-``"xla"`` keeps them pure-jnp oracles.  All of them accept batched
-(..., H, W) input — the markers use per-image reductions.
+* the **pointwise/jnp primitives** the expression evaluator itself uses
+  (``sat_sub``/``sat_add``, the HFILL/RAOBJ marker derivations,
+  ``qdt_raw``/``qdt_regularize``) — pure jnp, jit/vmap/shard-clean,
+  and the oracles the kernels are compared against;
+* the **operator sugar** (``hmax``, ``dome``, ``hfill``, ``raobj``,
+  ``opening_by_reconstruction``, ``asf``, ``qdt``): each builds its
+  graph via the builders in ``repro.api.expr`` (``hmax_expr`` & co.)
+  and executes it through ``repro.api.compile``, so composite chains
+  fuse into one padded program and the backend resolves by the one
+  policy in ``core.backend``.
+
+Legacy kwargs keep working through deprecation shims: ``backend=``
+forwards into the compiled expression (with a ``DeprecationWarning``),
+and ``max_iters=`` — which counts *elementary* steps, finer than the
+fused driver's K-chunk granularity — always runs the exact truncated
+jnp path, as before.  All operators accept batched (..., H, W) input;
+the markers use per-image reductions.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import morphology as M
+from repro.core.backend import warn_legacy_kwargs
+
+#: Parameter types the expression builders can embed as graph literals;
+#: anything else (e.g. a traced array threshold) takes the jnp path.
+_SCALAR = (int, float, bool, np.integer, np.floating)
 
 
-def _reconstruct(marker, mask, op, max_iters, backend):
-    """Dispatch reconstruction to the jnp oracle or the Pallas fast path.
+def _api():
+    from repro import api  # lazy: repro.api's lowering imports this module
 
-    An explicit ``max_iters`` counts *elementary* steps — the fused
-    driver can only truncate at K-chunk granularity, so truncated
-    reconstructions always run the exact jnp path regardless of
-    ``backend``.
-    """
-    if backend not in ("xla", "pallas"):
-        raise ValueError(f"backend must be 'xla' or 'pallas', got {backend!r}")
-    if backend == "pallas" and max_iters is None:
-        from repro.kernels import ops as K  # lazy: kernels import this module
+    return api
 
-        return K.reconstruct(marker, mask, op, "pallas")
+
+def _run(expr_builder, f, backend, *builder_args):
+    api = _api()
+    expr = expr_builder(*builder_args)
+    if f.ndim > 3:
+        # honour the (..., H, W) contract: fold leading batch dims into
+        # one (N, H, W) stack and unfold after (markers reduce over the
+        # trailing two axes, so per-image semantics are unaffected)
+        lead, hw = f.shape[:-2], f.shape[-2:]
+        n = int(np.prod(lead))
+        out = api.compile(expr, (n, *hw), f.dtype, backend)(
+            f.reshape(n, *hw))
+        return out.reshape(*lead, *out.shape[-2:])
+    return api.compile(expr, f.shape, f.dtype, backend)(f)
+
+
+def _legacy_reconstruct(marker, mask, op, max_iters):
+    """Truncated reconstruction: always the exact jnp path (an explicit
+    ``max_iters`` counts elementary steps — the fused driver can only
+    truncate at K-chunk granularity)."""
     if op == "erode":
         return M.erode_reconstruct(marker, mask, max_iters)
     return M.dilate_reconstruct(marker, mask, max_iters)
+
+
+def _rec_with_marker(marker, mask, op, backend):
+    """Reconstruction on a precomputed marker array, through compile."""
+    api = _api()
+    expr = api.E.reconstruct(api.E.input("marker"), api.E.input("mask"),
+                             op=op)
+    if marker.ndim > 3:
+        lead, hw = marker.shape[:-2], marker.shape[-2:]
+        n = int(np.prod(lead))
+        out = api.compile(expr, (n, *hw), marker.dtype, backend)(
+            marker.reshape(n, *hw), mask.reshape(n, *hw))
+        return out.reshape(marker.shape)
+    exe = api.compile(expr, marker.shape, marker.dtype, backend)
+    return exe(marker, mask)
+
+
+def _warn_legacy(entry, max_iters, backend):
+    legacy = [n for n, v in (("max_iters", max_iters),
+                             ("backend", backend)) if v is not None]
+    if legacy:
+        warn_legacy_kwargs(entry, *legacy)
+
 
 # ---------------------------------------------------------------------------
 # saturating arithmetic (the paper evaluates on unsigned char images)
@@ -65,17 +116,31 @@ def sat_add(f: jnp.ndarray, h) -> jnp.ndarray:
 
 
 def hmax(
-    f: jnp.ndarray, h, max_iters: int | None = None, backend: str = "xla"
+    f: jnp.ndarray, h, max_iters: int | None = None,
+    backend: str | None = None,
 ) -> jnp.ndarray:
     """HMAX_h(f) = δ_rec^f(f - h): suppress maxima of contrast < h."""
-    return _reconstruct(sat_sub(f, h), f, "dilate", max_iters, backend)
+    _warn_legacy("core.operators.hmax", max_iters, backend)
+    if max_iters is not None:
+        return _legacy_reconstruct(sat_sub(f, h), f, "dilate", max_iters)
+    if not isinstance(h, _SCALAR):
+        # h is an array/tracer: it cannot embed in the graph, but the
+        # reconstruction itself still compiles on the requested backend
+        return _rec_with_marker(sat_sub(f, h), f, "dilate", backend)
+    return _run(_api().hmax_expr, f, backend, h)
 
 
 def dome(
-    f: jnp.ndarray, h, max_iters: int | None = None, backend: str = "xla"
+    f: jnp.ndarray, h, max_iters: int | None = None,
+    backend: str | None = None,
 ) -> jnp.ndarray:
     """DOME_h(f) = f - HMAX_h(f): extract the suppressed maxima."""
-    return f - hmax(f, h, max_iters, backend)
+    _warn_legacy("core.operators.dome", max_iters, backend)
+    if max_iters is not None:
+        return f - _legacy_reconstruct(sat_sub(f, h), f, "dilate", max_iters)
+    if not isinstance(h, _SCALAR):
+        return f - _rec_with_marker(sat_sub(f, h), f, "dilate", backend)
+    return _run(_api().dome_expr, f, backend, h)
 
 
 # ---------------------------------------------------------------------------
@@ -102,10 +167,14 @@ def hfill_marker(f: jnp.ndarray) -> jnp.ndarray:
 
 
 def hfill(
-    f: jnp.ndarray, max_iters: int | None = None, backend: str = "xla"
+    f: jnp.ndarray, max_iters: int | None = None,
+    backend: str | None = None,
 ) -> jnp.ndarray:
     """HFILL(f) = ε_rec^f(m_HFILL(f)) (Eq. 8)."""
-    return _reconstruct(hfill_marker(f), f, "erode", max_iters, backend)
+    _warn_legacy("core.operators.hfill", max_iters, backend)
+    if max_iters is not None:
+        return _legacy_reconstruct(hfill_marker(f), f, "erode", max_iters)
+    return _run(_api().hfill_expr, f, backend)
 
 
 def raobj_marker(f: jnp.ndarray) -> jnp.ndarray:
@@ -115,10 +184,15 @@ def raobj_marker(f: jnp.ndarray) -> jnp.ndarray:
 
 
 def raobj(
-    f: jnp.ndarray, max_iters: int | None = None, backend: str = "xla"
+    f: jnp.ndarray, max_iters: int | None = None,
+    backend: str | None = None,
 ) -> jnp.ndarray:
     """RAOBJ(f) = f - δ_rec^f(m_RAOBJ(f)) (Eq. 10)."""
-    return f - _reconstruct(raobj_marker(f), f, "dilate", max_iters, backend)
+    _warn_legacy("core.operators.raobj", max_iters, backend)
+    if max_iters is not None:
+        return f - _legacy_reconstruct(raobj_marker(f), f, "dilate",
+                                       max_iters)
+    return _run(_api().raobj_expr, f, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -127,10 +201,18 @@ def raobj(
 
 
 def opening_by_reconstruction(
-    f: jnp.ndarray, s: int, max_iters: int | None = None, backend: str = "xla"
+    f: jnp.ndarray, s: int, max_iters: int | None = None,
+    backend: str | None = None,
 ) -> jnp.ndarray:
-    """γ_rec^s(f) = δ_rec^f(ε_s(f)): remove components smaller than s."""
-    return _reconstruct(M.erode(f, s), f, "dilate", max_iters, backend)
+    """γ_rec^s(f) = δ_rec^f(ε_s(f)): remove components smaller than s.
+
+    The erosion chain and the reconstruction compile into *one* padded
+    program (see ``repro.api.lower``)."""
+    _warn_legacy("core.operators.opening_by_reconstruction", max_iters,
+                 backend)
+    if max_iters is not None:
+        return _legacy_reconstruct(M.erode(f, s), f, "dilate", max_iters)
+    return _run(_api().opening_by_reconstruction_expr, f, backend, s)
 
 
 # ---------------------------------------------------------------------------
@@ -193,10 +275,15 @@ def qdt_regularize(d: jnp.ndarray, max_iters: int | None = None) -> jnp.ndarray:
     return out
 
 
-def qdt(f: jnp.ndarray, max_s: int | None = None) -> jnp.ndarray:
+def qdt(f: jnp.ndarray, max_s: int | None = None,
+        backend: str | None = None) -> jnp.ndarray:
     """L1-regularized quasi-distance transform d_L1(f)."""
-    d, _ = qdt_raw(f, max_s)
-    return qdt_regularize(d)
+    if backend is not None:
+        warn_legacy_kwargs("core.operators.qdt", "backend")
+    if max_s is not None:
+        d, _ = qdt_raw(f, max_s)
+        return qdt_regularize(d)
+    return _run(_api().qdt_l1_expr, f, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -234,12 +321,11 @@ def pattern_spectrum(f: jnp.ndarray, smax: int) -> jnp.ndarray:
 
 
 def asf(f: jnp.ndarray, s: int) -> jnp.ndarray:
-    """ASF_s(f) = φ_s(γ_s(...φ_1(γ_1(f))...)) — chain length 2·s·(s+1)."""
-    out = f
-    for k in range(1, s + 1):
-        out = M.opening(out, k)
-        out = M.closing(out, k)
-    return out
+    """ASF_s(f) = φ_s(γ_s(...φ_1(γ_1(f))...)) — chain length 2·s·(s+1).
+
+    Built as one expression graph; the lowered program fuses the
+    alternating chains into 2s+1 launches around a single pad/crop."""
+    return _run(_api().asf_expr, f, None, s)
 
 
 def asf_chain_length(s: int) -> int:
@@ -252,33 +338,29 @@ def asf_chain_length(s: int) -> int:
 # ---------------------------------------------------------------------------
 
 #: Registry hooks for ``repro.serve``: each public geodesic operator
-#: declared as data (name + param schema) next to its implementation.
-#:
-#: ``marker_reconstruct`` ops split into a per-request ``marker`` stage
-#: (runs on the *unpadded* image, so per-image reductions like
-#: ``hfill_marker``'s interior max never see bucket padding) and a
-#: batched reconstruction stage that the serve cache compiles once per
-#: bucket; ``residual=True`` subtracts the reconstruction from the
-#: original after cropping (DOME / RAOBJ).  ``whole_image`` ops run as
-#: one jnp program and are bucketed by exact shape (ASF alternates
-#: openings and closings, and the regularized QDT's η-iteration is
-#: conditional — neither admits an absorbing pad fill).
+#: declared as data (name + param schema + expression builder) next to
+#: its implementation.  The serve registry lowers the expression and
+#: derives the prepare (unpadded marker derivation) / run (batched,
+#: compiled per bucket) / finalize (post-crop residuals, the QDT
+#: η-regularization) stages mechanically — see
+#: ``repro.serve.registry``.
 SERVE_OPS = (
-    dict(name="hmax", kind="marker_reconstruct", direction="dilate",
-         marker=lambda f, p: sat_sub(f, p["h"]),
+    dict(name="hmax",
+         expr=lambda p: _api().hmax_expr(p["h"]),
          params={"h": dict(type="float", required=True)}),
-    dict(name="dome", kind="marker_reconstruct", direction="dilate",
-         marker=lambda f, p: sat_sub(f, p["h"]), residual=True,
+    dict(name="dome",
+         expr=lambda p: _api().dome_expr(p["h"]),
          params={"h": dict(type="float", required=True)}),
-    dict(name="hfill", kind="marker_reconstruct", direction="erode",
-         marker=lambda f, p: hfill_marker(f), params={}),
-    dict(name="raobj", kind="marker_reconstruct", direction="dilate",
-         marker=lambda f, p: raobj_marker(f), residual=True, params={}),
-    dict(name="open_rec", kind="marker_reconstruct", direction="dilate",
-         marker=lambda f, p: M.erode(f, p["s"]),
+    dict(name="hfill",
+         expr=lambda p: _api().hfill_expr(), params={}),
+    dict(name="raobj",
+         expr=lambda p: _api().raobj_expr(), params={}),
+    dict(name="open_rec",
+         expr=lambda p: _api().opening_by_reconstruction_expr(p["s"]),
          params={"s": dict(type="int", required=True, min=1)}),
-    dict(name="asf", kind="whole_image", fn=lambda f, p: asf(f, p["s"]),
+    dict(name="asf",
+         expr=lambda p: _api().asf_expr(p["s"]),
          params={"s": dict(type="int", required=True, min=1)}),
-    dict(name="qdt_l1", kind="whole_image", fn=lambda f, p: qdt(f),
-         params={}),
+    dict(name="qdt_l1",
+         expr=lambda p: _api().qdt_l1_expr(), params={}),
 )

@@ -1,23 +1,37 @@
-"""jit'd public wrappers over the fused Pallas kernels.
+"""Scheduler engine + public wrappers over the fused Pallas kernels.
 
-These are the framework's fast path for the paper's operators.  Each
-wrapper:
+This module owns the *engine*: padding/stacking layout helpers, the
+fixed-chain drivers (``morph_chain``, ``geodesic_chain``), and the
+active-cell requeue scheduler (``_drive_scheduler`` and the
+``_scheduled_reconstruct`` / ``_scheduled_qdt`` step bundles) that
+``repro.api``'s compiled executables drive.  The public operator sugar
+(``erode``/``dilate``/``opening``/``closing``/``reconstruct``/
+``qdt_planes``) is now thin: each call builds an expression and routes
+through ``repro.api.compile``, which
 
-  1. plans the fusion schedule (``core.chain.plan_chain``),
-  2. pads the image to the plan's (H_pad, W_pad) with the correct
-     absorbing values (lattice identity / mask pinning — see the kernel
-     docstrings for why this preserves border-clipped semantics),
-  3. drives the kernel with ``lax.scan`` (fixed chains) or
-     ``lax.while_loop`` (reconstruction — the paper's convergence
-     detection, Alg. 4),
-  4. crops back.
+  1. plans one fusion schedule for the whole program
+     (``core.chain.plan_chain``),
+  2. pads every input once with the correct absorbing values (lattice
+     identity / mask pinning — see the kernel docstrings for why this
+     preserves border-clipped semantics),
+  3. drives the kernels with ``lax.scan`` (fixed chains) or the requeue
+     scheduler (reconstruction — the paper's convergence detection,
+     Alg. 4),
+  4. crops back once.
 
 ``backend``:
   * ``"pallas"``  — the fused kernels (interpret=True on CPU; on TPU the
     same code path compiles natively with interpret=False).
-  * ``"xla"``     — same chunked schedule but pure-jnp bodies; what the
-    framework runs when Pallas is unavailable.  Still one compiled
-    program per chain (unlike the per-filter "naive" baseline).
+  * ``"xla"``     — the pure-jnp oracle bodies; what the framework runs
+    when Pallas is unavailable.  Still one compiled program per chain
+    (unlike the per-filter "naive" baseline).
+  * ``None``      — the platform policy default
+    (``core.backend.default_backend``).  Passing ``backend=`` to the
+    operator sugar is deprecated (it still works, with a
+    ``DeprecationWarning``); bind the backend at ``repro.api.compile``
+    time instead.  ``morph_chain``/``geodesic_chain``/
+    ``reconstruct_with_stats`` are engine entry points where
+    ``backend``/``plan``/``max_chunks`` remain first-class arguments.
 
 Batching: every public op accepts either a single (H, W) image or an
 (N, H, W) stack.  The stack is laid out vertically as one
@@ -54,12 +68,14 @@ scatter) and the ChainPlan contract it hangs off are documented in
 from __future__ import annotations
 
 import functools
-from typing import Literal, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import morphology as M
+from repro.core.backend import (Backend, canonicalize_backend,
+                                warn_legacy_kwargs)
 from repro.core.chain import ChainPlan, plan_chain
 from repro.kernels.common import ident_for
 from repro.kernels.erode_chain import chain_step
@@ -69,9 +85,13 @@ from repro.kernels.geodesic_chain import (geodesic_chain_step,
 from repro.kernels.qdt_chain import (qdt_chain_step, qdt_compact_step,
                                      qdt_tile_step)
 
-Backend = Literal["pallas", "xla"]
-
 _INTERPRET = jax.default_backend() != "tpu"
+
+
+def _api():
+    from repro import api  # lazy: repro.api builds on this module
+
+    return api
 
 
 class ReconstructStats(NamedTuple):
@@ -250,13 +270,15 @@ def morph_chain(
     f: jnp.ndarray,
     n: int,
     op: str = "erode",
-    backend: Backend = "pallas",
+    backend: Backend | None = None,
     plan: ChainPlan | None = None,
 ) -> jnp.ndarray:
     """Apply n elementary 3×3 erosions/dilations with K-step fusion.
 
-    Accepts (H, W) or a batched (N, H, W) stack.
+    Accepts (H, W) or a batched (N, H, W) stack.  Engine entry point:
+    ``backend`` (None = platform default) stays first-class here.
     """
+    backend = canonicalize_backend(backend)
     if backend == "xla":
         body = M.erode3 if op == "erode" else M.dilate3
         return jax.lax.fori_loop(0, n, lambda _, x: body(x), f)
@@ -290,21 +312,38 @@ def morph_chain(
     return _crop(x3, f.shape, was_2d)
 
 
-def erode(f: jnp.ndarray, s: int, backend: Backend = "pallas") -> jnp.ndarray:
+def _compile_unary(build, f, backend, name):
+    api = _api()
+    if backend is not None:
+        warn_legacy_kwargs(name, "backend")
+    exe = api.compile(build(api.E.input("f")), f.shape, f.dtype, backend)
+    return exe(f)
+
+
+def erode(f: jnp.ndarray, s: int, backend: Backend | None = None) -> jnp.ndarray:
     """ε_s via a chain of s elementary erosions (Eq. 4 decomposition)."""
-    return morph_chain(f, s, "erode", backend)
+    api = _api()
+    return _compile_unary(lambda x: api.E.erode(s, x), f, backend,
+                          "kernels.ops.erode")
 
 
-def dilate(f: jnp.ndarray, s: int, backend: Backend = "pallas") -> jnp.ndarray:
-    return morph_chain(f, s, "dilate", backend)
+def dilate(f: jnp.ndarray, s: int, backend: Backend | None = None) -> jnp.ndarray:
+    api = _api()
+    return _compile_unary(lambda x: api.E.dilate(s, x), f, backend,
+                          "kernels.ops.dilate")
 
 
-def opening(f: jnp.ndarray, s: int, backend: Backend = "pallas") -> jnp.ndarray:
-    return dilate(erode(f, s, backend), s, backend)
+def opening(f: jnp.ndarray, s: int, backend: Backend | None = None) -> jnp.ndarray:
+    """γ_s = δ_s ∘ ε_s — compiled as one two-segment padded program."""
+    api = _api()
+    return _compile_unary(lambda x: api.E.opening(s, x), f, backend,
+                          "kernels.ops.opening")
 
 
-def closing(f: jnp.ndarray, s: int, backend: Backend = "pallas") -> jnp.ndarray:
-    return erode(dilate(f, s, backend), s, backend)
+def closing(f: jnp.ndarray, s: int, backend: Backend | None = None) -> jnp.ndarray:
+    api = _api()
+    return _compile_unary(lambda x: api.E.closing(s, x), f, backend,
+                          "kernels.ops.closing")
 
 
 # ---------------------------------------------------------------------------
@@ -318,13 +357,16 @@ def geodesic_chain(
     m: jnp.ndarray,
     n: int,
     op: str = "erode",
-    backend: Backend = "pallas",
+    backend: Backend | None = None,
     plan: ChainPlan | None = None,
 ) -> jnp.ndarray:
     """n elementary geodesic steps (fixed length, Eq. 4).
 
-    Accepts (H, W) or a batched (N, H, W) marker/mask stack.
+    Accepts (H, W) or a batched (N, H, W) marker/mask stack.  Engine
+    entry point: ``backend`` (None = platform default) stays
+    first-class here.
     """
+    backend = canonicalize_backend(backend)
     if backend == "xla":
         step = M.geodesic_erode1 if op == "erode" else M.geodesic_dilate1
         return jax.lax.fori_loop(0, n, lambda _, x: step(x, m), f)
@@ -566,14 +608,11 @@ def _reconstruct_impl(f, m, op, backend, max_chunks, plan, with_stats=False):
     return _crop(_unstacked(out, f3.shape[0]), f.shape, was_2d), stats
 
 
-@functools.partial(
-    jax.jit, static_argnames=("op", "backend", "max_chunks", "plan")
-)
 def reconstruct(
     f: jnp.ndarray,
     m: jnp.ndarray,
     op: str = "erode",
-    backend: Backend = "pallas",
+    backend: Backend | None = None,
     max_chunks: int | None = None,
     plan: ChainPlan | None = None,
 ) -> jnp.ndarray:
@@ -581,13 +620,21 @@ def reconstruct(
 
     Accepts (H, W) or (N, H, W); in batched mode each image converges
     independently (its bands go inactive and stop costing work).
+    Routes through ``repro.api.compile``; ``backend=``/``max_chunks=``
+    are deprecated here (bind them at compile time instead).
     """
-    if backend == "xla":
-        if op == "erode":
-            return M.erode_reconstruct(f, m)
-        return M.dilate_reconstruct(f, m)
-    out, _ = _reconstruct_impl(f, m, op, backend, max_chunks, plan)
-    return out
+    legacy = [n for n, v in (("backend", backend),
+                             ("max_chunks", max_chunks)) if v is not None]
+    if legacy:
+        warn_legacy_kwargs("kernels.ops.reconstruct", *legacy)
+    if f.shape != m.shape:
+        raise ValueError(f"marker shape {f.shape} != mask shape {m.shape}")
+    api = _api()
+    expr = api.E.reconstruct(api.E.input("marker"), api.E.input("mask"),
+                             op=op)
+    exe = api.compile(expr, f.shape, f.dtype, backend, plan=plan,
+                      max_chunks=max_chunks)
+    return exe(f, m)
 
 
 @functools.partial(
@@ -597,13 +644,15 @@ def reconstruct_with_stats(
     f: jnp.ndarray,
     m: jnp.ndarray,
     op: str = "erode",
-    backend: Backend = "pallas",
+    backend: Backend | None = None,
     max_chunks: int | None = None,
     plan: ChainPlan | None = None,
 ):
     """Like ``reconstruct`` but also returns :class:`ReconstructStats`
     (chunk count and band-level requeue accounting — the analogue of the
-    paper's Table 5 chain lengths)."""
+    paper's Table 5 chain lengths).  Engine/diagnostic entry point:
+    ``backend``/``max_chunks``/``plan`` remain first-class here."""
+    backend = canonicalize_backend(backend)
     if backend == "xla":
         out, iters = (
             M.erode_reconstruct_with_iters(f, m) if op == "erode"
@@ -623,38 +672,17 @@ def reconstruct_with_stats(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "max_chunks", "plan"))
-def qdt_planes(
-    f: jnp.ndarray,
-    backend: Backend = "pallas",
-    max_chunks: int | None = None,
-    plan: ChainPlan | None = None,
-):
-    """d(f), r(f) of Eq. 13 with the fused masked-store kernel.
+def _scheduled_qdt(fp, plan: ChainPlan, max_chunks: int):
+    """QDT's step functions for :func:`_drive_scheduler`.
 
-    Accepts (H, W) or (N, H, W); runs the same active-band requeue
-    scheduler as ``reconstruct``.
+    ``fp`` is the stacked (TOTAL_H, W_pad) image, padded with the
+    erosion identity.  Returns the final (eroded, residual, distance)
+    stacked planes; the residual accumulator dtype follows the paper's
+    convention (float32 for float images, int32 otherwise).
     """
-    from repro.core.operators import qdt_raw
-
-    if backend == "xla":
-        return qdt_raw(f)
-
-    f3, was_2d = _as_stack(f)
-    _plan_for(f3, plan)
-    if plan is None:
-        plan = plan_chain(
-            f3.shape[1], f3.shape[2], f.dtype, None,
-            n_images_resident=3, n_images=f3.shape[0], convergent=True,
-        )
     k = plan.fuse_k
-    if max_chunks is None:
-        max_chunks = max(f3.shape[1], f3.shape[2]) // k + 2
-    acc = jnp.float32 if jnp.issubdtype(f.dtype, jnp.floating) else jnp.int32
-
-    ident = ident_for("erode", f.dtype)
-
-    fp = _stacked(_pad(f3, plan, ident))
+    acc = jnp.float32 if jnp.issubdtype(fp.dtype, jnp.floating) else jnp.int32
+    ident = ident_for("erode", fp.dtype)
     rp = jnp.zeros(fp.shape, acc)
     dp = jnp.zeros(fp.shape, jnp.int32)
 
@@ -695,49 +723,73 @@ def qdt_planes(
         d = _scatter_mid(d, idx, d2, plan)
         return (x, r, d), _scatter_flags(ch, idx, plan)
 
-    (_, r, d), _, _, _ = _drive_scheduler(
+    (x, r, d), _, _, _ = _drive_scheduler(
         plan, (fp, rp, dp), full_step=full_step, compact_step=compact_step,
         max_chunks=max_chunks,
     )
-    n_img = f3.shape[0]
-    return (
-        _crop(_unstacked(d, n_img), f.shape, was_2d),
-        _crop(_unstacked(r, n_img), f.shape, was_2d),
-    )
+    return x, r, d
+
+
+def qdt_planes(
+    f: jnp.ndarray,
+    backend: Backend | None = None,
+    max_chunks: int | None = None,
+    plan: ChainPlan | None = None,
+):
+    """d(f), r(f) of Eq. 13 with the fused masked-store kernel.
+
+    Accepts (H, W) or (N, H, W); runs the same active-band requeue
+    scheduler as ``reconstruct``.  Routes through
+    ``repro.api.compile``; ``backend=``/``max_chunks=`` are deprecated
+    here (bind them at compile time instead).
+    """
+    legacy = [n for n, v in (("backend", backend),
+                             ("max_chunks", max_chunks)) if v is not None]
+    if legacy:
+        warn_legacy_kwargs("kernels.ops.qdt_planes", *legacy)
+    api = _api()
+    exe = api.compile(api.E.qdt(api.E.input("f")), f.shape, f.dtype,
+                      backend, plan=plan, max_chunks=max_chunks)
+    return exe(f)
 
 
 # ---------------------------------------------------------------------------
 # serving registry hooks
 # ---------------------------------------------------------------------------
 
-#: Registry hooks for ``repro.serve``: every public kernel op gets a
-#: string name + param schema here, next to its implementation, so
-#: services can be declared as data (``repro.serve.registry`` consumes
-#: this and builds the batched entry points).
-#:
-#: ``pad`` names the absorbing fill for pad-to-bucket shape
-#: canonicalization ("hi" = erosion identity, "lo" = dilation identity)
-#: — exact because an n-fold erosion/dilation is one min/max-filter
-#: over the *original* padded image, and for reconstructions because
-#: padding marker and mask with the identity pins the pad region (the
-#: same contract the kernels' own ``_pad`` uses).  ``pad_safe=False``
-#: ops mix erosion and dilation phases, so no single fill is absorbing
-#: end-to-end; the bucketer gives them exact-shape buckets instead.
+#: Registry hooks for ``repro.serve``: every public kernel op declared
+#: as data next to its implementation — a string name, a param schema
+#: and an *expression builder*.  ``repro.serve.registry`` lowers the
+#: expression (``repro.api.lower``) and derives the pipeline stages,
+#: pad fills and bucket identity mechanically from the lowered program;
+#: nothing op-specific lives in the registry anymore.
 SERVE_OPS = (
-    dict(name="erode", kind="chain", chain_op="erode", pad="hi",
+    dict(name="erode",
+         expr=lambda p: _api().E.erode(p["s"], _api().E.input("f")),
          params={"s": dict(type="int", required=True, min=1)}),
-    dict(name="dilate", kind="chain", chain_op="dilate", pad="lo",
+    dict(name="dilate",
+         expr=lambda p: _api().E.dilate(p["s"], _api().E.input("f")),
          params={"s": dict(type="int", required=True, min=1)}),
-    dict(name="opening", kind="unary_fn", fn=opening, pad_safe=False,
+    dict(name="opening",
+         expr=lambda p: _api().E.opening(p["s"], _api().E.input("f")),
          params={"s": dict(type="int", required=True, min=1)}),
-    dict(name="closing", kind="unary_fn", fn=closing, pad_safe=False,
+    dict(name="closing",
+         expr=lambda p: _api().E.closing(p["s"], _api().E.input("f")),
          params={"s": dict(type="int", required=True, min=1)}),
-    dict(name="reconstruct", kind="reconstruct",
+    dict(name="reconstruct",
+         expr=lambda p: _api().E.reconstruct(_api().E.input("marker"),
+                                             _api().E.input("mask"),
+                                             op=p["op"]),
          params={"op": dict(type="str", default="dilate",
                             choices=("erode", "dilate"))}),
-    dict(name="geodesic", kind="geodesic",
+    dict(name="geodesic",
+         expr=lambda p: _api().E.geodesic(_api().E.input("marker"),
+                                          _api().E.input("mask"),
+                                          p["n"], p["op"]),
          params={"n": dict(type="int", required=True, min=1),
                  "op": dict(type="str", default="erode",
                             choices=("erode", "dilate"))}),
-    dict(name="qdt", kind="qdt", pad="hi", params={}),
+    dict(name="qdt",
+         expr=lambda p: _api().E.qdt(_api().E.input("f")),
+         params={}),
 )

@@ -18,21 +18,27 @@ TPU/Pallas port, one stage per module:
     The paper examines the machine topology at run time and schedules
     the chain accordingly; here every public operator of
     ``core.operators`` / ``kernels.ops`` is declared as data (string
-    name + param schema via their ``SERVE_OPS`` hooks), and the
-    per-bucket :class:`~repro.core.chain.ChainPlan` — the TPU analogue
-    of that topology examination — is derived per compiled program.
+    name + param schema + *expression builder* via their ``SERVE_OPS``
+    hooks).  The registry lowers each expression through
+    ``repro.api.lower`` and derives the prepare/run/finalize pipeline
+    stages, pad fills and bucket identity mechanically from the lowered
+    program; the per-bucket :class:`~repro.core.chain.ChainPlan` — the
+    TPU analogue of that topology examination — is bound per compiled
+    program by ``repro.api.compile``.
 ``bucketer``
     The paper feeds same-shaped row windows through a fixed pipeline;
     heterogeneous request traffic is coalesced into ``(N, H, W)``
-    stacks per (op, params, padded-shape, dtype) bucket, with
-    absorbing-identity padding (the kernels' own border contract) and a
-    ``max_delay_ms`` deadline so stragglers never wait for co-batched
-    traffic that may never arrive.
+    stacks per (run-signature, padded-shape, dtype) bucket — cross-op
+    packing: different operators whose run phases compile identically
+    (HMAX/DOME/RAOBJ) co-batch — with absorbing-identity padding (the
+    kernels' own border contract) and a ``max_delay_ms`` deadline so
+    stragglers never wait for co-batched traffic that may never arrive.
 ``cache``
     The paper amortizes schedule construction across the stream; the
     LRU compiled-program cache amortizes trace+compile across requests,
-    keyed on (op, params, bucket shape, dtype, backend), each entry
-    carrying the ChainPlan it embeds.
+    keyed on ``Executable.key`` (lowered run signature + bucket shape/
+    dtype/backend + plan key — the same identity the ``repro.api``
+    compile cache uses), each entry carrying the ChainPlan it embeds.
 ``executor``
     The paper overlaps the filters of a chain across cores; the
     executor overlaps *host staging* of the next stack with *device

@@ -3,11 +3,12 @@
 Incoming requests are coalesced per *bucket* so the executor can push
 full ``(N, H, W)`` stacks through one compiled program:
 
-* **bucket key** = (op, canonical params, padded (H, W), dtype).  For
-  pad-safe ops the image shape is rounded up to ``pad_quantum``
-  multiples, so a 500×300 and a 512×320 request share one compiled
-  program; pad-unsafe ops get exact-shape buckets (still batched across
-  same-shape requests).
+* **bucket key** = (lowered run signature, padded (H, W), dtype) —
+  cross-op packing: ops whose run phases compile identically co-batch
+  regardless of op name (see :class:`BucketKey`).  For pad-safe ops the
+  image shape is rounded up to ``pad_quantum`` multiples, so a 500×300
+  and a 512×320 request share one compiled program; pad-unsafe ops get
+  exact-shape buckets (still batched across same-shape requests).
 * **batch canonicalization**: a flushed batch of n requests is padded
   with sentinel images to the next power of two ≤ ``max_batch``, so the
   handful of canonical batch shapes reuse compiled programs instead of
@@ -54,16 +55,20 @@ def canonical_batch(n: int, max_batch: int) -> int:
 
 
 class BucketKey(NamedTuple):
-    op: str
-    params: tuple          # canonical (name, value) pairs
+    """Bucket identity: the lowered *run signature* + padded shape +
+    dtype.  Keying on the run signature instead of the op name is what
+    lets different ops with identical compiled run phases (HMAX / DOME
+    / RAOBJ — all one dilate-reconstruction) co-batch; params that only
+    affect prepare/finalize (e.g. HMAX's ``h``) never split buckets."""
+
+    sig: tuple             # run-phase signature (registry.RunInfo.sig)
     hw: tuple[int, int]    # bucket (H, W) after canonicalization
     dtype: str
+    tag: str               # human label for the run phase (derived)
 
     def label(self) -> str:
         """Human/metrics-facing name for this bucket."""
-        p = ",".join(f"{k}={v}" for k, v in self.params if v is not None)
-        core = f"{self.op}({p})" if p else self.op
-        return f"{core}/{self.hw[0]}x{self.hw[1]}/{self.dtype}"
+        return f"{self.tag}/{self.hw[0]}x{self.hw[1]}/{self.dtype}"
 
 
 @dataclasses.dataclass
@@ -97,12 +102,19 @@ class Ticket:
 
 @dataclasses.dataclass
 class PendingRequest:
-    """A submitted request staged in a bucket queue."""
+    """A submitted request staged in a bucket queue.
+
+    Requests in one bucket may come from *different ops* (cross-op
+    packing), so everything per-op rides on the request: the staging
+    info derived from its lowered program and its finalize callable.
+    """
 
     ticket: Ticket
     images: tuple           # original user images (np, unpadded)
-    inputs: tuple           # canonical inputs from OpSpec.prepare (unpadded)
+    inputs: tuple           # canonical inputs after prepare (unpadded)
     shape: tuple[int, int]  # original (H, W) for the demux crop
+    info: Any = None        # registry.RunInfo (staging/bucket identity)
+    finalize: Any = None    # (outputs, images) -> outputs, or None
 
 
 class BucketQueue:

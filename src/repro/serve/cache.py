@@ -1,12 +1,15 @@
 """Compiled-program cache: LRU over jitted bucket programs.
 
-Each entry wraps the ``jax.jit`` callable compiled for one
-(op, params, bucket shape, dtype, backend) key together with the
-:class:`~repro.core.chain.ChainPlan` it embeds (kernel-backed ops plan
-their fusion schedule per bucket; ``entry.plan.key`` exposes it for
-introspection/metrics).  Eviction is least-recently-used; ``warm``
-prefill builds entries without counting toward the hit/miss statistics
-so steady-state hit-rate stays meaningful.
+Each entry wraps the callable compiled for one bucket program together
+with the :class:`~repro.core.chain.ChainPlan` it embeds
+(``entry.plan.key`` exposes it for introspection/metrics).  Keys are
+``Executable.key`` — lowered run signature + bucket shape/dtype/backend
++ plan key, the same identity the ``repro.api`` compile cache uses —
+so the serve cache key and the compile key are one object; custom
+(non-expression) OpSpecs key on (name, params) instead.  Eviction is
+least-recently-used; ``warm`` prefill builds entries without counting
+toward the hit/miss statistics so steady-state hit-rate stays
+meaningful.
 
 The ChainPlan fields that make up ``plan.key`` — i.e. exactly what a
 compiled schedule is identified by — are documented in

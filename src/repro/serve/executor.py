@@ -9,10 +9,11 @@ the current one, and the executor only blocks when ``depth`` batches
 are already in flight (``depth=2`` is classic double buffering).
 
 Draining a batch demuxes it: each real request slot is cropped back to
-its original (H, W) (dropping the pad-to-bucket canonicalization),
-``OpSpec.finalize`` runs per request (e.g. DOME's ``f - hmax``), the
-ticket is fulfilled, and sentinel slots (batch padding up to the
-canonical size) are discarded.
+its original (H, W) (dropping the pad-to-bucket canonicalization), the
+*request's own* finalize stage runs (requests in one bucket may come
+from different ops under cross-op packing — e.g. DOME's ``f - hmax``
+residual next to plain HMAX requests), the ticket is fulfilled, and
+sentinel slots (batch padding up to the canonical size) are discarded.
 
 Where this sits in the pipeline (registry → bucketer → cache →
 executor) is mapped in ``docs/ARCHITECTURE.md``.
@@ -31,10 +32,8 @@ from repro.serve.metrics import ServeMetrics
 
 
 class InflightBatch(NamedTuple):
-    outputs: tuple           # device buffers, one per OpSpec output
+    outputs: tuple           # device buffers, one per run output
     requests: list           # real PendingRequests (sentinel slots excluded)
-    spec: object             # OpSpec
-    params: tuple
     key: BucketKey
     n_slots: int
     t_dispatch: float
@@ -54,7 +53,7 @@ class Executor:
     def inflight(self) -> int:
         return len(self._inflight)
 
-    def dispatch(self, entry, spec, key: BucketKey, params: tuple,
+    def dispatch(self, entry, key: BucketKey,
                  requests: list[PendingRequest], n_slots: int,
                  stacked_inputs: tuple) -> None:
         """Launch one batch (async) and retire the oldest if the
@@ -69,8 +68,8 @@ class Executor:
             raise
         outputs = out if isinstance(out, tuple) else (out,)
         self._inflight.append(InflightBatch(
-            outputs=outputs, requests=requests, spec=spec, params=params,
-            key=key, n_slots=n_slots, t_dispatch=self.clock(),
+            outputs=outputs, requests=requests, key=key,
+            n_slots=n_slots, t_dispatch=self.clock(),
         ))
         while len(self._inflight) > self.depth:
             self.drain_one()
@@ -114,15 +113,13 @@ class Executor:
             h, w = req.shape
             cropped = tuple(o[slot, :h, :w] for o in batch.outputs)
             try:
-                if batch.spec.finalize is not None:
-                    cropped = tuple(
-                        batch.spec.finalize(c, tuple(map(jnp.asarray,
-                                                         req.images)),
-                                            dict(batch.params))
-                        for c in cropped
-                    )
+                if req.finalize is not None:
+                    cropped = tuple(req.finalize(
+                        cropped, tuple(map(jnp.asarray, req.images))))
+                # arity per request: co-batched ops share a run phase
+                # but may fan their finalize into different output counts
                 req.ticket.value = (
-                    cropped[0] if batch.spec.n_outputs == 1 else cropped
+                    cropped[0] if req.info.n_outputs == 1 else cropped
                 )
             except Exception as exc:  # surface per-request, keep serving
                 req.ticket.error = exc

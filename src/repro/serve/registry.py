@@ -1,39 +1,49 @@
-"""Operator registry: every servable op declared as data.
+"""Operator registry: every servable op is an expression, and its
+pipeline stages are *derived* from the lowered program.
 
 The implementations stay where they live — ``core.operators`` and
 ``kernels.ops`` each export a ``SERVE_OPS`` hook tuple (name + param
-schema next to the code) and this module translates the hooks into
-:class:`OpSpec` entries the service pipeline understands.  A service is
-then *declared* as data: ``[("hmax", {"h": 40}), ("erode", {"s": 16})]``.
+schema + expression builder next to the code).  This module lowers the
+expression (``repro.api.lower``) and reads the three pipeline stages
+off the :class:`~repro.api.lower.Program` mechanically:
 
-Each :class:`OpSpec` describes the three pipeline stages:
+``prepare``
+    the program's prepare exprs, evaluated per-request on the
+    *unpadded* images — marker derivation (so per-image reductions like
+    ``hfill_marker``'s interior max never see bucket padding);
+``run``
+    the program's run phase, compiled per bucket via
+    ``repro.api.compile`` — the serve cache key **is**
+    ``Executable.key`` (lowered run signature + bucket shape/dtype/
+    backend + plan key), the same object the compile cache uses;
+``finalize``
+    the program's finalize region, evaluated per request on the cropped
+    run outputs (DOME's ``f - hmax``, the QDT η-regularization).
 
-``prepare(images, params)``
-    per-request, on the *unpadded* image — marker derivation happens
-    here so per-image reductions (``hfill_marker``'s interior max, …)
-    never see bucket padding.
-``run(inputs, params, backend, plan)``
-    the batched core compiled once per (bucket, params, backend) by the
-    serve cache; kernel-backed ops receive an explicit
-    :class:`~repro.core.chain.ChainPlan` so the compiled-plan cache can
-    report the schedule it embeds.
-``finalize(out, images, params)``
-    per-request, after the demux crop (e.g. DOME's ``f - hmax``).
+Pad-to-bucket safety is derived too: single-kernel-segment programs are
+pad-safe under their lowered fills; multi-phase programs (ASF,
+opening-by-reconstruction) get exact-shape buckets (see
+``docs/ARCHITECTURE.md`` for the exactness argument).
 
-``pad_fills(params)`` names the absorbing fill ("hi"/"lo") used for
-pad-to-bucket canonicalization of each canonical input; ops with
-``pad_safe=False`` are bucketed by exact shape instead (see the hooks'
-docstrings for the exactness argument, and ``docs/ARCHITECTURE.md``
-for the repo-wide bit-exactness convention it instantiates).
+Because the bucket identity is the lowered *run signature* rather than
+the op name, different operators whose run phases coincide — HMAX,
+DOME and RAOBJ are all one dilate-reconstruction — co-batch into one
+compiled bucket program (cross-op bucket packing).
+
+Custom :class:`OpSpec` objects with a hand-written ``run`` callable are
+still accepted by :func:`register` (tests and extensions use this);
+they bucket by (name, params) as before.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Mapping
 
-from repro.core import operators as OPS
-from repro.core.chain import plan_chain
-from repro.kernels import ops as K
+import jax.numpy as jnp
+
+from repro.api.expr import KERNEL_KINDS
+from repro.api.lower import eval_pointwise, lower
 
 _TYPES = {"int": int, "float": float, "str": str}
 
@@ -66,22 +76,41 @@ class ParamSpec:
             )
         return value
 
+    def sample(self):
+        """A representative value (used once at registration to derive
+        arity/outputs from the lowered sample expression)."""
+        if self.default is not None:
+            return self.default
+        if self.choices:
+            return self.choices[0]
+        if self.type == "int":
+            return max(1, self.min or 1)
+        if self.type == "float":
+            return float(self.min) if self.min is not None else 1.0
+        return ""
+
 
 @dataclasses.dataclass(frozen=True)
 class OpSpec:
-    """A servable operator: string name, param schema, pipeline stages."""
+    """A servable operator: expression-derived or custom.
+
+    For expression ops only ``name``/``params``/``expr_builder`` are
+    declared; everything else is derived from the lowered program.  The
+    remaining fields exist for custom (hand-written ``run``) specs.
+    """
 
     name: str
     params: Mapping[str, ParamSpec]
-    run: Callable
+    expr_builder: Callable | None = None   # params dict -> Expr
+    run: Callable | None = None            # custom: (inputs, params, backend, plan)
     arity: int = 1           # image inputs per request (user-facing)
     n_inputs: int | None = None  # canonical inputs after prepare (None=arity)
     n_outputs: int = 1
     pad_safe: bool = True
     pad_fills: Callable | None = None      # params dict -> ("hi"|"lo", ...)
-    prepare: Callable | None = None        # None = identity
-    finalize: Callable | None = None
-    plan_builder: Callable | None = None   # (n, h, w, dtype, params) -> plan
+    prepare: Callable | None = None        # custom per-request stage
+    finalize: Callable | None = None       # custom: (out, images, params)
+    plan_builder: Callable | None = None   # custom: (n, h, w, dtype, params)
 
     def canonical_params(self, params: Mapping | None) -> tuple:
         """Validate + normalize params into a sorted hashable tuple
@@ -106,10 +135,91 @@ class OpSpec:
             )
         return tuple(out)
 
+    def build_expr(self, canon: tuple):
+        return self.expr_builder(dict(canon))
+
     def prepare_inputs(self, images: tuple, params: tuple) -> tuple:
+        """Per-request prepare stage on the unpadded images."""
+        if self.expr_builder is not None:
+            info = request_info(self.name, params)
+            env = dict(zip(info.program.input_names,
+                           (jnp.asarray(im) for im in images)))
+            memo: dict = {}
+            return tuple(eval_pointwise(e, env, {}, memo)
+                         for e in info.program.prepare)
         if self.prepare is None:
             return images
         return self.prepare(images, dict(params))
+
+
+@dataclasses.dataclass(frozen=True)
+class RunInfo:
+    """Everything the service needs to bucket/stage one request."""
+
+    expr: Any                # Expr for expression ops, None for custom
+    program: Any             # lowered Program (None for custom)
+    sig: tuple               # bucket identity of the run phase
+    label: str               # human tag for metrics bucket labels
+    n_inputs: int            # canonical run inputs to stage
+    n_outputs: int
+    fills: tuple             # "hi"/"lo" per canonical input
+    pad_safe: bool
+
+
+@functools.lru_cache(maxsize=2048)
+def request_info(op: str, canon: tuple) -> RunInfo:
+    """Derive (and memoize) the staging/bucketing info for one
+    (op, canonical params) pair."""
+    spec = get(op)
+    if spec.expr_builder is None:
+        n_inputs = spec.n_inputs or spec.arity
+        fills = (tuple(spec.pad_fills(dict(canon))) if spec.pad_fills
+                 else ("hi",) * n_inputs)
+        p = ",".join(f"{k}={v}" for k, v in canon if v is not None)
+        return RunInfo(
+            expr=None, program=None, sig=("custom", spec.name, canon),
+            label=f"{spec.name}({p})" if p else spec.name,
+            n_inputs=n_inputs, n_outputs=spec.n_outputs, fills=fills,
+            pad_safe=spec.pad_safe,
+        )
+    expr = spec.build_expr(canon)
+    prog = lower(expr)
+    return RunInfo(
+        expr=expr, program=prog, sig=prog.run_sig, label=prog.sig_label(),
+        n_inputs=len(prog.run_fills), n_outputs=prog.n_outputs,
+        fills=prog.run_fills, pad_safe=prog.pad_safe,
+    )
+
+
+@functools.lru_cache(maxsize=2048)
+def request_finalize(op: str, canon: tuple) -> Callable | None:
+    """Per-request finalize callable ``(outputs, images) -> outputs``,
+    or None when the run outputs are the results (identity)."""
+    spec = get(op)
+    if spec.expr_builder is None:
+        if spec.finalize is None:
+            return None
+
+        def legacy(outs, images, _spec=spec, _canon=canon):
+            return tuple(_spec.finalize(o, images, dict(_canon))
+                         for o in outs)
+
+        return legacy
+    prog = request_info(op, canon).program
+    if prog.expr.kind in KERNEL_KINDS:
+        return None  # root is the kernel output itself
+
+    def finalize(outs, images, _prog=prog):
+        kernel_vals = {
+            (node, i): outs[j]
+            for j, (node, i, _) in enumerate(_prog.kernel_outputs)
+        }
+        env = dict(zip(_prog.input_names, images))
+        memo: dict = {}
+        return tuple(eval_pointwise(e, env, kernel_vals, memo)
+                     for e in _prog.result_exprs())
+
+    return finalize
 
 
 def _specs(op_name: str, schema: Mapping) -> dict[str, ParamSpec]:
@@ -117,140 +227,8 @@ def _specs(op_name: str, schema: Mapping) -> dict[str, ParamSpec]:
 
 
 # ---------------------------------------------------------------------------
-# hook translation (one builder per hook kind)
+# registration
 # ---------------------------------------------------------------------------
-
-
-def _convergent_plan(resident):
-    def build(n, h, w, dtype, params):
-        return plan_chain(h, w, dtype, None, n_images_resident=resident,
-                          n_images=n, convergent=True)
-    return build
-
-
-def _from_chain(hook) -> OpSpec:
-    chain_op = hook["chain_op"]
-
-    def run(inputs, params, backend, plan):
-        return K.morph_chain(inputs[0], dict(params)["s"], chain_op, backend,
-                             plan=plan)
-
-    def plan_builder(n, h, w, dtype, params):
-        return plan_chain(h, w, dtype, params["s"], n_images=n)
-
-    return OpSpec(
-        name=hook["name"], params=_specs(hook["name"], hook["params"]),
-        run=run, pad_fills=lambda p: (hook["pad"],),
-        plan_builder=plan_builder,
-    )
-
-
-def _from_unary_fn(hook) -> OpSpec:
-    fn = hook["fn"]
-
-    def run(inputs, params, backend, plan):
-        return fn(inputs[0], dict(params)["s"], backend)
-
-    return OpSpec(
-        name=hook["name"], params=_specs(hook["name"], hook["params"]),
-        run=run, pad_safe=hook.get("pad_safe", True),
-    )
-
-
-def _from_reconstruct(hook) -> OpSpec:
-    def run(inputs, params, backend, plan):
-        return K.reconstruct(inputs[0], inputs[1], dict(params)["op"],
-                             backend, plan=plan)
-
-    def pad_fills(params):
-        which = "hi" if params["op"] == "erode" else "lo"
-        return (which, which)
-
-    return OpSpec(
-        name=hook["name"], params=_specs(hook["name"], hook["params"]),
-        run=run, arity=2, pad_fills=pad_fills,
-        plan_builder=_convergent_plan(2),
-    )
-
-
-def _from_geodesic(hook) -> OpSpec:
-    def run(inputs, params, backend, plan):
-        p = dict(params)
-        return K.geodesic_chain(inputs[0], inputs[1], p["n"], p["op"],
-                                backend, plan=plan)
-
-    def pad_fills(params):
-        which = "hi" if params["op"] == "erode" else "lo"
-        return (which, which)
-
-    def plan_builder(n, h, w, dtype, params):
-        return plan_chain(h, w, dtype, params["n"], n_images_resident=2,
-                          n_images=n)
-
-    return OpSpec(
-        name=hook["name"], params=_specs(hook["name"], hook["params"]),
-        run=run, arity=2, pad_fills=pad_fills, plan_builder=plan_builder,
-    )
-
-
-def _from_qdt(hook) -> OpSpec:
-    def run(inputs, params, backend, plan):
-        return K.qdt_planes(inputs[0], backend, plan=plan)
-
-    return OpSpec(
-        name=hook["name"], params=_specs(hook["name"], hook["params"]),
-        run=run, n_outputs=2, pad_fills=lambda p: (hook["pad"],),
-        plan_builder=_convergent_plan(3),
-    )
-
-
-def _from_marker_reconstruct(hook) -> OpSpec:
-    direction = hook["direction"]
-    marker = hook["marker"]
-    residual = hook.get("residual", False)
-
-    def prepare(images, params):
-        return (marker(images[0], params), images[0])
-
-    def run(inputs, params, backend, plan):
-        return K.reconstruct(inputs[0], inputs[1], direction, backend,
-                             plan=plan)
-
-    finalize = None
-    if residual:
-        def finalize(out, images, params):
-            return images[0] - out
-
-    which = "hi" if direction == "erode" else "lo"
-    return OpSpec(
-        name=hook["name"], params=_specs(hook["name"], hook["params"]),
-        run=run, prepare=prepare, finalize=finalize, n_inputs=2,
-        pad_fills=lambda p, _w=which: (_w, _w),
-        plan_builder=_convergent_plan(2),
-    )
-
-
-def _from_whole_image(hook) -> OpSpec:
-    fn = hook["fn"]
-
-    def run(inputs, params, backend, plan):
-        return fn(inputs[0], dict(params))
-
-    return OpSpec(
-        name=hook["name"], params=_specs(hook["name"], hook["params"]),
-        run=run, pad_safe=False,
-    )
-
-
-_BUILDERS = {
-    "chain": _from_chain,
-    "unary_fn": _from_unary_fn,
-    "reconstruct": _from_reconstruct,
-    "geodesic": _from_geodesic,
-    "qdt": _from_qdt,
-    "marker_reconstruct": _from_marker_reconstruct,
-    "whole_image": _from_whole_image,
-}
 
 _REGISTRY: dict[str, OpSpec] = {}
 
@@ -275,9 +253,25 @@ def names() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def _from_hook(hook) -> OpSpec:
+    """Build an OpSpec from a SERVE_OPS hook: lower a sample expression
+    once to derive the shape of the op (arity, outputs, pad-safety)."""
+    params = _specs(hook["name"], hook["params"])
+    sample = {name: p.sample() for name, p in params.items()}
+    prog = lower(hook["expr"](sample))
+    return OpSpec(
+        name=hook["name"], params=params, expr_builder=hook["expr"],
+        arity=len(prog.input_names), n_inputs=len(prog.run_fills),
+        n_outputs=prog.n_outputs, pad_safe=prog.pad_safe,
+    )
+
+
 def _install_hooks():
+    from repro.core import operators as OPS
+    from repro.kernels import ops as K
+
     for hook in (*K.SERVE_OPS, *OPS.SERVE_OPS):
-        register(_BUILDERS[hook["kind"]](hook))
+        register(_from_hook(hook))
 
 
 _install_hooks()

@@ -1,10 +1,14 @@
 """The serving front-end: submit → bucket → compile-or-hit → execute.
 
 ``Service`` ties the pieces together: the :mod:`registry` validates ops
-and params, the :mod:`bucketer` coalesces requests into shape/dtype
-buckets, the :mod:`cache` maps (op, params, bucket shape, dtype,
-backend) to compiled programs + their :class:`ChainPlan`, and the
-:mod:`executor` runs the double-buffered pipeline and demuxes results.
+and params and lowers each request's expression, the :mod:`bucketer`
+coalesces requests into *run-signature*/shape/dtype buckets (cross-op
+packing: ops with identical compiled run phases co-batch), the
+:mod:`cache` maps ``Executable.key`` — the same identity the
+``repro.api`` compile cache uses — to compiled bucket programs + their
+:class:`ChainPlan`, and the :mod:`executor` runs the double-buffered
+pipeline and demuxes results, applying each request's own finalize
+stage.
 
 The service is single-threaded and cooperatively scheduled: ``submit``
 launches a bucket the moment it fills, and every ``submit``/``poll``
@@ -25,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.serve import registry
 from repro.serve.bucketer import (BucketKey, BucketQueue, PendingRequest,
                                   Ticket, bucket_hw, canonical_batch,
@@ -81,6 +86,7 @@ class Service:
                     f"{[(i.shape, str(i.dtype)) for i in imgs]}"
                 )
         canon = spec.canonical_params(params)
+        info = registry.request_info(op, canon)
 
         ticket = Ticket(request_id=self._next_id, op=op,
                         t_enqueue=self.clock(), _service=self)
@@ -88,9 +94,9 @@ class Service:
         req = PendingRequest(
             ticket=ticket, images=imgs,
             inputs=spec.prepare_inputs(imgs, canon), shape=imgs[0].shape,
+            info=info, finalize=registry.request_finalize(op, canon),
         )
-        key = self._bucket_for(spec, op, canon, imgs[0].shape,
-                               imgs[0].dtype)
+        key = self._bucket_for(info, imgs[0].shape, imgs[0].dtype)
         ticket._bucket_key = key
         ticket._queued = True
         if self._queue.add(key, req):
@@ -128,62 +134,80 @@ class Service:
             return
         for req in requests:
             req.ticket._queued = False
-        spec = registry.get(key.op)
+        info = requests[0].info
         n_slots = canonical_batch(len(requests), self.max_batch)
         try:
-            entry = self.cache.get(
-                self._cache_key(key, n_slots),
-                functools.partial(self._build, spec, key, n_slots),
-            )
-            stacked = self._stage(spec, key, requests, n_slots)
+            entry = self._entry_for(key, info, n_slots, warm=False)
+            stacked = self._stage(info, key, requests, n_slots)
         except Exception as exc:
             # the requests are already out of the queue: resolve their
             # tickets with the error instead of stranding them (the
             # dispatch path inside the executor does the same).
             self.executor._fail_batch(requests, exc)
             raise
-        self.executor.dispatch(entry, spec, key, key.params, requests,
-                               n_slots, stacked)
+        self.executor.dispatch(entry, key, requests, n_slots, stacked)
 
-    def _bucket_for(self, spec, op: str, canon: tuple, shape,
-                    dtype) -> BucketKey:
+    def _bucket_for(self, info, shape, dtype) -> BucketKey:
         """The one place (submit + warmup) bucket keys are derived."""
         h, w = shape
         return BucketKey(
-            op=op, params=canon,
-            hw=bucket_hw(h, w, self.pad_quantum) if spec.pad_safe else (h, w),
+            sig=info.sig,
+            hw=bucket_hw(h, w, self.pad_quantum) if info.pad_safe else (h, w),
             dtype=str(np.dtype(dtype)),
+            tag=info.label,
         )
 
-    def _cache_key(self, key: BucketKey, n_slots: int) -> tuple:
-        return (key.op, key.params, (n_slots, *key.hw), key.dtype,
-                self.backend)
+    def _cache_identity(self, key: BucketKey, info, n_slots: int):
+        """The cache key (and, for expression ops, the Executable —
+        compiling is a cheap cached lookup)."""
+        if info.expr is not None:
+            exe = api.compile(info.expr, (n_slots, *key.hw),
+                              np.dtype(key.dtype), self.backend)
+            return exe.key, exe
+        return (info.sig, (n_slots, *key.hw), key.dtype, self.backend), None
 
-    def _build(self, spec, key: BucketKey, n_slots: int) -> CacheEntry:
+    def _entry_for(self, key: BucketKey, info, n_slots: int,
+                   warm: bool) -> CacheEntry:
+        """Compiled bucket program: the cache key *is* the compile key."""
+        lookup = self.cache.warm if warm else self.cache.get
+        cache_key, exe = self._cache_identity(key, info, n_slots)
+        if exe is not None:
+            return lookup(
+                cache_key,
+                lambda: CacheEntry(fn=exe.run_batch, plan=exe.plan,
+                                   key=cache_key),
+            )
+        spec = registry.get(info.sig[1])  # ("custom", name, canon)
+        return lookup(
+            cache_key,
+            functools.partial(self._build_custom, spec, info.sig[2], key,
+                              n_slots, cache_key),
+        )
+
+    def _build_custom(self, spec, canon: tuple, key: BucketKey,
+                      n_slots: int, cache_key: tuple) -> CacheEntry:
         h, w = key.hw
         plan = None
         if self.backend == "pallas" and spec.plan_builder is not None:
             plan = spec.plan_builder(n_slots, h, w, np.dtype(key.dtype),
-                                     dict(key.params))
+                                     dict(canon))
 
         def call(*inputs):
-            return spec.run(inputs, key.params, self.backend, plan)
+            out = spec.run(inputs, canon, self.backend, plan)
+            return out if isinstance(out, tuple) else (out,)
 
-        return CacheEntry(fn=jax.jit(call), plan=plan,
-                          key=self._cache_key(key, n_slots))
+        return CacheEntry(fn=jax.jit(call), plan=plan, key=cache_key)
 
-    def _stage(self, spec, key: BucketKey, requests, n_slots: int) -> tuple:
+    def _stage(self, info, key: BucketKey, requests, n_slots: int) -> tuple:
         """Host staging: pad each canonical input to the bucket shape and
         stack; sentinel slots keep the absorbing fill (they converge in
         one chunk under the active-tile scheduler)."""
         h, w = key.hw
         dtype = np.dtype(key.dtype)
-        n_inputs = spec.n_inputs or spec.arity
-        fills = (spec.pad_fills(dict(key.params)) if spec.pad_fills
-                 else ("hi",) * n_inputs)
         stacked = []
-        for j in range(n_inputs):
-            buf = np.full((n_slots, h, w), pad_fill(dtype, fills[j]), dtype)
+        for j in range(info.n_inputs):
+            buf = np.full((n_slots, h, w), pad_fill(dtype, info.fills[j]),
+                          dtype)
             for i, req in enumerate(requests):
                 rh, rw = req.shape
                 buf[i, :rh, :rw] = np.asarray(req.inputs[j])
@@ -204,18 +228,15 @@ class Service:
         for e in entries:
             spec = registry.get(e["op"])
             canon = spec.canonical_params(e.get("params"))
-            key = self._bucket_for(spec, e["op"], canon, e["shape"],
-                                   e["dtype"])
+            info = registry.request_info(e["op"], canon)
+            key = self._bucket_for(info, e["shape"], e["dtype"])
             n_slots = canonical_batch(e.get("batch", self.max_batch),
                                       self.max_batch)
-            cache_key = self._cache_key(key, n_slots)
+            cache_key, _ = self._cache_identity(key, info, n_slots)
             if cache_key in self.cache:
-                continue  # duplicate entry: don't re-execute the program
-            entry = self.cache.warm(
-                cache_key,
-                functools.partial(self._build, spec, key, n_slots),
-            )
-            stacked = self._stage(spec, key, [], n_slots)
+                continue  # already resident: don't re-execute the program
+            entry = self._entry_for(key, info, n_slots, warm=True)
+            stacked = self._stage(info, key, [], n_slots)
             jax.block_until_ready(entry.fn(*stacked))
 
     def stats(self) -> dict:

@@ -1,0 +1,456 @@
+"""Expression API (repro.api): every operator built as a graph and
+``compile``d must be bit-exact against independently composed dense
+references, on both backends, 2-D and batched, across dtypes; fusion
+must be *visible* in ``Executable.stats()`` (fewer pad/launch
+round-trips than the legacy per-stage path); and the deprecation shims
+on the legacy call surfaces must warn while staying bit-exact.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.api import E
+from repro.api.lower import LoweringError, lower
+from repro.core import morphology as M
+from repro.core import operators as OPS
+from repro.core.backend import BACKENDS, canonicalize_backend, default_backend
+from repro.core.chain import plan_chain
+from repro.kernels import ops as K
+
+pytestmark = pytest.mark.pipeline
+
+DTYPES = [np.uint8, np.float32, np.float64]
+
+
+def _image(rng, shape, dtype):
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        return rng.integers(0, 255, shape).astype(dtype)
+    return rng.normal(size=shape).astype(dtype)
+
+
+def _h(dtype):
+    return 40 if np.issubdtype(np.dtype(dtype), np.integer) else 0.25
+
+
+# Each case: name -> (expr builder (dtype -> Expr),
+#                     per-image dense reference (f2d [, m2d] -> out),
+#                     arity)
+def _cases():
+    def asf_ref(f):
+        out = f
+        for k in (1, 2):
+            out = M.closing(M.opening(out, k), k)
+        return out
+
+    return {
+        "erode5": (lambda dt: E.erode(5, E.input("f")),
+                   lambda f: M.erode(f, 5), 1),
+        "dilate5": (lambda dt: E.dilate(5, E.input("f")),
+                    lambda f: M.dilate(f, 5), 1),
+        "opening3": (lambda dt: E.opening(3, E.input("f")),
+                     lambda f: M.opening(f, 3), 1),
+        "closing3": (lambda dt: E.closing(3, E.input("f")),
+                     lambda f: M.closing(f, 3), 1),
+        "hmax": (lambda dt: api.hmax_expr(_h(dt)),
+                 lambda f: M.dilate_reconstruct(
+                     OPS.sat_sub(f, _h(f.dtype)), f), 1),
+        "dome": (lambda dt: api.dome_expr(_h(dt)),
+                 lambda f: f - M.dilate_reconstruct(
+                     OPS.sat_sub(f, _h(f.dtype)), f), 1),
+        "hfill": (lambda dt: api.hfill_expr(),
+                  lambda f: M.erode_reconstruct(OPS.hfill_marker(f), f), 1),
+        "raobj": (lambda dt: api.raobj_expr(),
+                  lambda f: f - M.dilate_reconstruct(
+                      OPS.raobj_marker(f), f), 1),
+        "open_rec3": (lambda dt: api.opening_by_reconstruction_expr(3),
+                      lambda f: M.dilate_reconstruct(M.erode(f, 3), f), 1),
+        "asf2": (lambda dt: api.asf_expr(2), asf_ref, 1),
+        "qdt_l1": (lambda dt: api.qdt_l1_expr(),
+                   lambda f: OPS.qdt_regularize(OPS.qdt_raw(f)[0]), 1),
+        "reconstruct": (
+            lambda dt: E.reconstruct(E.input("marker"), E.input("mask"),
+                                     op="dilate"),
+            lambda mk, ms: M.dilate_reconstruct(mk, ms), 2),
+        "geodesic4": (
+            lambda dt: E.geodesic(E.input("marker"), E.input("mask"),
+                                  4, "erode"),
+            lambda mk, ms: M.geodesic_erode(mk, ms, 4), 2),
+    }
+
+
+def _inputs(rng, shape, dtype, arity):
+    if arity == 1:
+        return (jnp.asarray(_image(rng, shape, dtype)),)
+    mask = _image(rng, shape, dtype)
+    marker = np.minimum(_image(rng, shape, dtype), mask)  # marker <= mask
+    return (jnp.asarray(marker), jnp.asarray(mask))
+
+
+CASES = _cases()
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("batched", [False, True], ids=["2d", "batched"])
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_expression_ops_bit_exact_xla(rng, name, dtype, batched):
+    """Every expression-built operator vs its dense reference (xla)."""
+    build, ref, arity = CASES[name]
+    shape = (3, 26, 33) if batched else (26, 33)
+    if name == "geodesic4":
+        # geodesic erosion wants marker >= mask
+        mask = jnp.asarray(_image(rng, shape, dtype))
+        other = jnp.asarray(_image(rng, shape, dtype))
+        inputs = (jnp.maximum(other, mask), mask)
+    else:
+        inputs = _inputs(rng, shape, dtype, arity)
+    exe = api.compile(build(dtype), shape, inputs[0].dtype, "xla")
+    out = exe(*inputs)
+    if batched:
+        for i in range(shape[0]):
+            np.testing.assert_array_equal(
+                np.asarray(out[i]),
+                np.asarray(ref(*(x[i] for x in inputs))),
+                err_msg=f"{name} {np.dtype(dtype)} image {i}")
+    else:
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(ref(*inputs)),
+            err_msg=f"{name} {np.dtype(dtype)}")
+
+
+@pytest.mark.parametrize("dtype", [np.uint8, np.float32])
+@pytest.mark.parametrize("batched", [False, True], ids=["2d", "batched"])
+@pytest.mark.parametrize("name", ["erode5", "hmax", "open_rec3", "asf2"])
+def test_expression_ops_bit_exact_pallas(rng, name, dtype, batched):
+    """The padded fused programs (chains, refills, OBR's chain +
+    reconstruction, the requeue scheduler) vs the same references."""
+    build, ref, arity = CASES[name]
+    shape = (2, 40, 52) if batched else (40, 52)
+    inputs = _inputs(rng, shape, dtype, arity)
+    exe = api.compile(build(dtype), shape, inputs[0].dtype, "pallas")
+    out = exe(*inputs)
+    outs = out if batched else out[None]
+    for i in range(outs.shape[0]):
+        np.testing.assert_array_equal(
+            np.asarray(outs[i]),
+            np.asarray(ref(*((x if not batched else x[i])
+                             for x in inputs))),
+            err_msg=f"{name} {np.dtype(dtype)} image {i}")
+
+
+def test_qdt_expression_two_outputs(rng):
+    f = jnp.asarray(_image(rng, (40, 52), np.uint8))
+    for backend in ("xla", "pallas"):
+        d, r = api.compile(E.qdt(E.input("f")), f.shape, f.dtype, backend)(f)
+        dw, rw = OPS.qdt_raw(f)
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(dw))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(rw))
+
+
+# ---------------------------------------------------------------------------
+# fusion accounting: the point of the single padded program
+# ---------------------------------------------------------------------------
+
+
+def _stagewise_stats(stages, shape, dtype):
+    """The legacy path: one compiled program (pad + launch + crop) per
+    elementary stage, summed via Executable.stats()."""
+    totals = {"pads": 0, "crops": 0, "launches": 0}
+    for op, s in stages:
+        builder = E.erode if op == "erode" else E.dilate
+        st = api.compile(builder(s, E.input("f")), shape, dtype,
+                         "pallas").stats()
+        for k in totals:
+            totals[k] += st[k]
+    return totals
+
+
+def test_asf_fuses_fewer_roundtrips():
+    """ASF via compile: one pad/crop and 2s+1 fused launches vs the
+    per-stage path's 4s pad/launch/crop round-trips."""
+    s = 3
+    shape, dtype = (64, 96), np.uint8
+    fused = api.compile(api.asf_expr(s), shape, dtype, "pallas").stats()
+    stages = []
+    for k in range(1, s + 1):
+        stages += [("erode", k), ("dilate", k),   # γ_k
+                   ("dilate", k), ("erode", k)]   # φ_k
+    legacy = _stagewise_stats(stages, shape, dtype)
+    assert fused["pads"] == 1 and fused["crops"] == 1
+    assert fused["launches"] == 2 * s + 1
+    assert legacy["pads"] == 4 * s and legacy["launches"] == 4 * s
+    assert fused["pads"] < legacy["pads"]
+    assert fused["launches"] < legacy["launches"]
+    assert fused["fused_chain_len"] == OPS.asf_chain_length(s)
+
+
+def test_obr_is_single_padded_program():
+    """Opening-by-reconstruction: erosion chain + reconstruction share
+    one pad/crop (no intermediate crop/re-pad between the stages)."""
+    st = api.compile(api.opening_by_reconstruction_expr(4), (64, 96),
+                     np.uint8, "pallas").stats()
+    assert st["pads"] == 1 and st["crops"] == 1
+    assert st["launches"] == 2  # chain + reconstruct
+    prog = lower(api.opening_by_reconstruction_expr(4))
+    assert [s.kind for s in prog.kernel_segments] == ["chain", "reconstruct"]
+
+
+def test_adjacent_chain_runs_merge():
+    f = E.input("f")
+    prog = lower(E.erode(3, E.erode(2, f)))
+    (seg,) = prog.segments
+    assert seg.kind == "chain" and seg.param("n") == 5
+    # a shared intermediate must NOT fuse through
+    mid = E.erode(2, f)
+    prog2 = lower(E.sub(E.erode(3, mid), mid))
+    assert [s.param("n") for s in prog2.kernel_segments] == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# compile cache + keys
+# ---------------------------------------------------------------------------
+
+
+def test_compile_cache_hits():
+    expr = api.hmax_expr(17.0)
+    before = api.cache_stats()
+    a = api.compile(expr, (32, 32), np.uint8, "xla")
+    b = api.compile(expr, (32, 32), np.uint8, "xla")
+    assert a is b
+    after = api.cache_stats()
+    assert after["hits"] >= before["hits"] + 1
+
+
+def test_run_signature_shared_across_prepare_only_differences():
+    """HMAX/DOME/RAOBJ — and HMAX at different h — lower to the same
+    run phase, hence the same bucket/compile identity."""
+    sig = lower(api.hmax_expr(40.0)).run_sig
+    assert lower(api.hmax_expr(12.5)).run_sig == sig
+    assert lower(api.dome_expr(40.0)).run_sig == sig
+    assert lower(api.raobj_expr()).run_sig == sig
+    assert lower(api.hfill_expr()).run_sig != sig  # erode-reconstruction
+    exe_h = api.compile(api.hmax_expr(40.0), (2, 32, 32), np.uint8, "pallas")
+    exe_d = api.compile(api.dome_expr(12.5), (2, 32, 32), np.uint8, "pallas")
+    assert exe_h.key == exe_d.key
+
+
+def test_serve_cross_op_co_batching(rng):
+    """hmax + dome + raobj requests land in ONE bucket and one batch."""
+    from repro.serve import Service
+
+    class FakeClock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    f1, f2, f3 = (_image(rng, (40, 56), np.uint8) for _ in range(3))
+    svc = Service(backend="xla", max_batch=4, max_delay_ms=1e9,
+                  pad_quantum=32, clock=FakeClock())
+    t1 = svc.submit("hmax", f1, params={"h": 40})
+    t2 = svc.submit("dome", f2, params={"h": 25})
+    t3 = svc.submit("raobj", f3)
+    svc.flush()
+    stats = svc.stats()
+    assert stats["totals"]["batches"] == 1  # cross-op packed
+    (bucket,) = stats["buckets"].values()
+    assert bucket["requests"] == 3
+    np.testing.assert_array_equal(
+        np.asarray(t1.result()),
+        np.asarray(M.dilate_reconstruct(OPS.sat_sub(jnp.asarray(f1), 40),
+                                        jnp.asarray(f1))))
+    np.testing.assert_array_equal(
+        np.asarray(t2.result()),
+        np.asarray(jnp.asarray(f2) - M.dilate_reconstruct(
+            OPS.sat_sub(jnp.asarray(f2), 25), jnp.asarray(f2))))
+    np.testing.assert_array_equal(
+        np.asarray(t3.result()),
+        np.asarray(jnp.asarray(f3) - M.dilate_reconstruct(
+            OPS.raobj_marker(jnp.asarray(f3)), jnp.asarray(f3))))
+
+
+# ---------------------------------------------------------------------------
+# backend policy + deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_backend_policy_single_source():
+    assert default_backend() in BACKENDS
+    assert canonicalize_backend(None) == default_backend()
+    assert canonicalize_backend("xla") == "xla"
+    with pytest.raises(ValueError, match="backend must be one of"):
+        canonicalize_backend("cuda")
+    with pytest.raises(ValueError, match="backend must be one of"):
+        api.compile(E.erode(2, E.input("f")), (16, 16), np.uint8, "cuda")
+
+
+def test_default_backends_agree(rng):
+    """operators and kernels resolve the same policy default now."""
+    f = jnp.asarray(_image(rng, (32, 40), np.uint8))
+    np.testing.assert_array_equal(
+        np.asarray(K.erode(f, 3)), np.asarray(M.erode(f, 3)))
+    np.testing.assert_array_equal(
+        np.asarray(OPS.hmax(f, 40)),
+        np.asarray(M.dilate_reconstruct(OPS.sat_sub(f, 40), f)))
+
+
+def test_deprecation_shims_warn_and_match(rng):
+    f = jnp.asarray(_image(rng, (36, 44), np.uint8))
+    mask = jnp.asarray(_image(rng, (36, 44), np.uint8))
+    marker = jnp.minimum(f, mask)
+
+    with pytest.warns(DeprecationWarning, match="backend"):
+        legacy = OPS.hmax(f, 40, backend="xla")
+    np.testing.assert_array_equal(np.asarray(legacy),
+                                  np.asarray(OPS.hmax(f, 40)))
+
+    with pytest.warns(DeprecationWarning, match="backend"):
+        legacy = OPS.hmax(f, 40, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(legacy),
+                                  np.asarray(OPS.hmax(f, 40)))
+
+    with pytest.warns(DeprecationWarning, match="max_iters"):
+        trunc = OPS.hfill(f, max_iters=f.shape[0] * f.shape[1])
+    np.testing.assert_array_equal(np.asarray(trunc),
+                                  np.asarray(OPS.hfill(f)))
+
+    with pytest.warns(DeprecationWarning, match="backend"):
+        legacy = K.reconstruct(marker, mask, "dilate", backend="xla")
+    np.testing.assert_array_equal(
+        np.asarray(legacy), np.asarray(M.dilate_reconstruct(marker, mask)))
+
+    with pytest.warns(DeprecationWarning, match="max_chunks"):
+        capped = K.reconstruct(marker, mask, "dilate",
+                               max_chunks=f.shape[0] * f.shape[1])
+    np.testing.assert_array_equal(
+        np.asarray(capped), np.asarray(M.dilate_reconstruct(marker, mask)))
+
+    with pytest.warns(DeprecationWarning, match="backend"):
+        d, r = K.qdt_planes(f, backend="xla")
+    dw, rw = OPS.qdt_raw(f)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dw))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(rw))
+
+
+# ---------------------------------------------------------------------------
+# expression sugar + validation
+# ---------------------------------------------------------------------------
+
+
+def test_pipe_sugar_builds_the_same_graph():
+    f = E.input("f")
+    assert (f >> E.erode(2) >> E.dilate(3)) == E.dilate(3, E.erode(2, f))
+    combo = E.erode(2) >> E.dilate(3)      # point-free composition
+    assert combo(f) == E.dilate(3, E.erode(2, f))
+    assert (f >> E.reconstruct(mask=f, op="dilate")
+            == E.reconstruct(f, f, op="dilate"))
+    assert f - E.erode(1, f) == E.sub(f, E.erode(1, f))
+
+
+def test_compile_validation(rng):
+    f = E.input("f")
+    with pytest.raises(TypeError, match="unapplied pipe"):
+        api.compile(E.erode(2), (16, 16), np.uint8)
+    with pytest.raises(ValueError, match="shape must be"):
+        api.compile(E.erode(2, f), (16,), np.uint8)
+    exe = api.compile(E.erode(2, f), (16, 16), np.uint8, "xla")
+    with pytest.raises(ValueError, match="does not match the compiled"):
+        exe(jnp.zeros((8, 8), jnp.uint8))
+    with pytest.raises(ValueError, match="dtype"):
+        exe(jnp.zeros((16, 16), jnp.float32))
+    with pytest.raises(TypeError, match="takes 1 input"):
+        exe(jnp.zeros((16, 16), jnp.uint8), jnp.zeros((16, 16), jnp.uint8))
+    bad_plan = plan_chain(64, 64, np.uint8, None)
+    with pytest.raises(ValueError, match="smaller than"):
+        api.compile(E.erode(2, f), (200, 200), np.uint8, "pallas",
+                    plan=bad_plan)
+    # pointwise stages between kernels are not lowerable
+    with pytest.raises(LoweringError, match="pointwise"):
+        lower(E.erode(2, E.sub(f, E.erode(1, f))))
+
+
+def test_operator_sugar_accepts_nd_batches(rng):
+    """The (..., H, W) contract: leading batch dims beyond one fold
+    into a stack and unfold after."""
+    f = jnp.asarray(rng.integers(0, 255, (2, 3, 24, 30)).astype(np.uint8))
+    out = OPS.hmax(f, 40)
+    d = OPS.qdt(f)
+    assert out.shape == f.shape and d.shape == f.shape
+    for i in range(2):
+        for j in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(out[i, j]),
+                np.asarray(M.dilate_reconstruct(
+                    OPS.sat_sub(f[i, j], 40), f[i, j])))
+            np.testing.assert_array_equal(
+                np.asarray(d[i, j]),
+                np.asarray(OPS.qdt_regularize(OPS.qdt_raw(f[i, j])[0])))
+
+
+def test_explicit_plan_validated_on_every_backend():
+    """A mismatched plan= is a caller bug even when the jnp engine
+    would not use it."""
+    bad = plan_chain(64, 64, np.uint8, None)
+    for backend in ("xla", "pallas"):
+        with pytest.raises(ValueError, match="smaller than"):
+            api.compile(E.erode(2, E.input("f")), (200, 200), np.uint8,
+                        backend, plan=bad)
+
+
+def test_array_threshold_honors_backend(rng):
+    """A non-scalar h cannot embed in the graph, but the reconstruction
+    still compiles on the requested backend (and stays bit-exact)."""
+    f = jnp.asarray(_image(rng, (40, 52), np.uint8))
+    want = np.asarray(OPS.hmax(f, 40))
+    with pytest.warns(DeprecationWarning, match="backend"):
+        out = OPS.hmax(f, jnp.asarray(40, f.dtype), backend="pallas")
+    np.testing.assert_array_equal(np.asarray(out), want)
+    np.testing.assert_array_equal(          # and with the policy default
+        np.asarray(OPS.dome(f, jnp.asarray(40, f.dtype))),
+        np.asarray(OPS.dome(f, 40)))
+
+
+def test_co_batched_ops_with_different_output_arity(rng):
+    """Two ops sharing one run signature but fanning finalize into
+    different output counts must each demux with their own arity."""
+    from repro.serve import Service, registry
+
+    register_spec = registry.OpSpec(
+        name="_qdt_span_test", params={},
+        expr_builder=lambda p: E.sub(E.pick(E.qdt(E.input("f")), 0),
+                                     E.pick(E.qdt(E.input("f")), 1)),
+    )
+    registry.register(register_spec)
+    try:
+        f1 = _image(rng, (32, 40), np.uint8)
+        f2 = _image(rng, (32, 40), np.uint8)
+        svc = Service(backend="xla", max_batch=4, max_delay_ms=1e9,
+                      pad_quantum=32)
+        tq = svc.submit("qdt", f1)            # n_outputs == 2
+        ts = svc.submit("_qdt_span_test", f2)  # n_outputs == 1
+        svc.flush()
+        assert svc.stats()["totals"]["batches"] == 1  # same run signature
+        d, r = tq.result()                    # still a 2-tuple
+        dw, rw = OPS.qdt_raw(jnp.asarray(f1))
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(dw))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(rw))
+        span = ts.result()                    # a single array
+        dw2, rw2 = OPS.qdt_raw(jnp.asarray(f2))
+        np.testing.assert_array_equal(np.asarray(span),
+                                      np.asarray(dw2 - rw2))
+    finally:
+        registry._REGISTRY.pop("_qdt_span_test", None)
+
+
+def test_registry_derived_shapes():
+    """Registry OpSpecs are derived from the lowered expressions."""
+    from repro.serve import registry
+
+    assert registry.get("reconstruct").arity == 2
+    assert registry.get("geodesic").arity == 2
+    assert registry.get("qdt").n_outputs == 2
+    assert registry.get("hmax").n_inputs == 2      # (marker, mask)
+    assert registry.get("asf").pad_safe is False   # exact-shape buckets
+    assert registry.get("open_rec").pad_safe is False  # fused multi-phase
+    assert registry.get("erode").pad_safe is True
+    assert registry.get("qdt_l1").pad_safe is True  # η-step is finalize
