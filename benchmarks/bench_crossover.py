@@ -39,7 +39,8 @@ def run(quick: bool = True):
         rows.append({
             "name": f"crossover/{dname}/summary",
             "us_per_call": 0.0,
-            "derived": f"chained_faster_until_s={crossover or '>'+str(sweep[-1])}"
+            "derived":
+                f"chained_faster_until_s={crossover or '>'+str(sweep[-1])}"
                        f" (window {(crossover or sweep[-1])*2+1}px)",
         })
     return rows

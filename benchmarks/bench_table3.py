@@ -24,7 +24,8 @@ def run(quick: bool = True):
         entries = {
             # proposed (ours): banded VMEM working set per grid step
             "proposed_fused": (
-                f"cmp_per_px=4 working_set={(3*(th+2*k)*plan.width_pad*b)//1024}KiB"
+                f"cmp_per_px=4 "
+                f"working_set={(3*(th+2*k)*plan.width_pad*b)//1024}KiB"
                 f" (band {th}+2x{k} halo, VMEM) bandwidth_amp="
                 f"{plan.bandwidth_amplification:.1f}x redundancy="
                 f"{plan.redundant_compute_fraction:.1%}"
@@ -32,7 +33,8 @@ def run(quick: bool = True):
             # paper's proposed: 2X per filter x T filters
             "paper_cpu_pipeline": f"cmp_per_px=4 mem=2X*T={2*x}B*T",
             "pixel_pump": f"cmp_per_px=O(1) mem=(3X+3)*T={(3*x+3)}B*T",
-            "smil_like_naive": f"cmp_per_px=4 mem=XY={x*x*b//1024}KiB full image per filter",
+            "smil_like_naive": f"cmp_per_px=4 mem=XY={x*x*b//1024}KiB "
+                               "full image per filter",
             "vhgw": f"cmp_per_px=3 mem=2 prefix/suffix rows={2*x*b}B",
         }
         for name, derived in entries.items():

@@ -1,0 +1,150 @@
+"""Index-map bounds analysis for the halo-assembly kernels
+(check class e).
+
+A Pallas ``BlockSpec`` maps a grid step to a *block index*; block ``b``
+of size ``bs`` reads rows ``[b·bs, (b+1)·bs)``.  An index map that
+steps outside the array is silent corruption in interpret mode and
+undefined behaviour under Mosaic, so this module proves, for every
+grid step of a plan's schedule, that every one of the real specs —
+``kernels/common.py:row_specs`` (top/mid/bot row bands) and
+``kernels/common.py:tile_specs`` (the nine 2-D halo blocks) — stays in
+bounds.  The specs are imported and *evaluated*, not re-modelled: the
+index maps are plain functions of the grid indices, so calling them on
+every concrete grid point is a complete enumeration, and the bounds
+the verifier proves are exactly the bounds the kernels launch with.
+
+Two facts per schedule:
+
+* **bounds** — for each spec, each grid step, each axis:
+  ``0 ≤ b`` and ``(b+1)·bs ≤ dim``.  The clamped halo maps
+  (``max(i·r−1, 0)``, ``min((i+1)·r, last)``) satisfy this by design;
+  dropping a clamp is the seeded mutation;
+* **partition** — the *centre* spec must visit every block of the
+  array exactly once across the grid (a bijection), otherwise bands
+  overlap (racy writes through the matching out_spec) or rows are
+  never produced.  Halo specs are exempt: clamping deliberately
+  re-reads border blocks.
+"""
+from __future__ import annotations
+
+import itertools
+
+from repro.analysis.findings import ERROR, Finding
+
+__all__ = ["blocks_of", "check_block_specs", "check_partition",
+           "check_plan_index_maps"]
+
+
+def blocks_of(spec, grid):
+    """Evaluate ``spec.index_map`` on every grid step → list of
+    ``(grid_step, block_index)`` tuples of plain ints."""
+    out = []
+    for step in itertools.product(*(range(g) for g in grid)):
+        idx = spec.index_map(*step)
+        out.append((step, tuple(int(b) for b in idx)))
+    return out
+
+
+def check_block_specs(specs, grid, shape, subject="block-specs") -> list:
+    """Bounds proof: every block of every spec lies inside ``shape``."""
+    out = []
+    for k, spec in enumerate(specs):
+        bs = tuple(int(b) for b in spec.block_shape)
+        if len(bs) != len(shape):
+            out.append(Finding(
+                "index-map", ERROR, subject,
+                f"spec {k}: block rank {len(bs)} != array rank "
+                f"{len(shape)}"))
+            continue
+        if any(b < 1 for b in bs):
+            out.append(Finding(
+                "index-map", ERROR, subject,
+                f"spec {k}: non-positive block shape {bs}"))
+            continue
+        if any(d % b for d, b in zip(shape, bs)):
+            out.append(Finding(
+                "index-map", ERROR, subject,
+                f"spec {k}: block shape {bs} does not divide the array "
+                f"{shape} — the last block would read past the edge"))
+            continue
+        for step, blk in blocks_of(spec, grid):
+            for axis, (b, s, d) in enumerate(zip(blk, bs, shape)):
+                if b < 0:
+                    out.append(Finding(
+                        "index-map", ERROR, subject,
+                        f"spec {k}, grid step {step}: negative block "
+                        f"index {b} on axis {axis}"))
+                elif (b + 1) * s > d:
+                    out.append(Finding(
+                        "index-map", ERROR, subject,
+                        f"spec {k}, grid step {step}: block {b} of size "
+                        f"{s} reads rows [{b * s}, {(b + 1) * s}) past "
+                        f"axis-{axis} extent {d} (unclamped halo map?)"))
+    return out
+
+
+def check_partition(spec, grid, shape, subject="centre spec") -> list:
+    """Bijection proof: the centre spec's blocks tile the array exactly
+    once across the grid."""
+    out = []
+    bs = tuple(int(b) for b in spec.block_shape)
+    if len(bs) != len(shape) or any(b < 1 for b in bs) \
+            or any(d % b for d, b in zip(shape, bs)):
+        return out  # bounds check already reports these
+    want = set(itertools.product(*(range(d // b)
+                                   for d, b in zip(shape, bs))))
+    seen: dict[tuple, tuple] = {}
+    for step, blk in blocks_of(spec, grid):
+        if blk in seen:
+            out.append(Finding(
+                "index-map", ERROR, subject,
+                f"grid steps {seen[blk]} and {step} both map to block "
+                f"{blk} — overlapping writes race through the out_spec"))
+        seen[blk] = step
+    missing = want - set(seen)
+    if missing:
+        out.append(Finding(
+            "index-map", ERROR, subject,
+            f"{len(missing)} block(s) never visited (e.g. "
+            f"{sorted(missing)[0]}) — those rows are never produced"))
+    extra = set(seen) - want
+    if extra:
+        out.append(Finding(
+            "index-map", ERROR, subject,
+            f"block(s) outside the array visited: {sorted(extra)[:3]}"))
+    return out
+
+
+def check_plan_index_maps(plan) -> list:
+    """Evaluate the real kernel specs over ``plan``'s full grids.
+
+    The row-band schedule launches over ``(total_bands,)`` on the
+    ``(n_images·height_pad, width_pad)`` stack; the 2-D tile schedule
+    (when ``tile_w`` is set) over ``(total_bands, n_tiles)``.  Degenerate
+    plans (reported by ``repro.analysis.plans``) are skipped — the specs
+    are only meaningful on a structurally valid plan.
+    """
+    from repro.kernels.common import row_specs, tile_specs
+
+    if (plan.fuse_k < 1 or plan.band_h < plan.fuse_k
+            or plan.band_h % plan.fuse_k or plan.height_pad % plan.band_h
+            or plan.width_pad < 1
+            or (plan.tile_w and (plan.tile_w % plan.fuse_k
+                                 or plan.width_pad % plan.tile_w))):
+        return []
+
+    h = plan.n_images * plan.height_pad
+    w = plan.width_pad
+    out = []
+
+    grid = (h // plan.band_h,)
+    specs = row_specs(plan.band_h, plan.fuse_k, h, w)
+    out += check_block_specs(specs, grid, (h, w), "row_specs")
+    out += check_partition(specs[1], grid, (h, w), "row_specs[mid]")
+
+    if plan.tile_w:
+        grid2 = (h // plan.band_h, w // plan.tile_w)
+        specs2 = tile_specs(plan.band_h, plan.tile_w, plan.fuse_k, h, w)
+        out += check_block_specs(specs2, grid2, (h, w), "tile_specs")
+        out += check_partition(specs2[4], grid2, (h, w), "tile_specs[mid]")
+    return out

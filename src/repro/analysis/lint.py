@@ -1,0 +1,124 @@
+"""Exhaustive repo lint: ``python -m repro.analysis.lint``.
+
+Sweeps every expression operator in the serve registry across a
+dtype × shape × backend matrix, compiles each combination (verify
+hook deferred — this CLI *is* the verifier) and runs the full-level
+static checks: halo/pad-state proofs, plan constraints, numeric
+index-map enumeration, cache-key mutation sweeps, dtype audits and
+Mosaic-readiness diagnostics.  The serve bucketer's pad fills are
+audited once against the kernel lattice identities on top.
+
+Exit status: 1 when any ERROR-severity finding survives (or any WARN
+under ``--strict``), 0 otherwise — the CI gate.  Nothing is executed:
+a clean sweep is a set of static proofs about every program the
+registry can currently lower.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import dtypes as dtype_checks
+from repro.analysis.findings import Report, VerificationError
+from repro.analysis.verifier import verify_executable
+
+#: Default sweep matrix: the paper's char→double crossover dtypes, a
+#: lane-aligned shape, a batched non-square shape and a ragged shape
+#: (exercises the tile_w=0 fallback), on both engines.
+DTYPES = ("uint8", "uint16", "float32", "float64")
+SHAPES = ((1, 64, 64), (4, 48, 96), (1, 33, 70))
+BACKENDS = ("pallas", "xla")
+
+
+def _sample_params(spec) -> tuple:
+    """Canonical sample params for one OpSpec (registration defaults)."""
+    return tuple((name, spec.params[name].sample())
+                 for name in sorted(spec.params))
+
+
+def iter_registry_cases(ops=None, dtypes=DTYPES, shapes=SHAPES,
+                        backends=BACKENDS):
+    """Yield ``(label, expr, shape3, dtype, backend)`` for every
+    expression op in the registry; custom (hand-written ``run``) specs
+    have no lowered program to verify and are skipped."""
+    from repro.serve import registry
+
+    for name in ops or registry.names():
+        spec = registry.get(name)
+        if spec.expr_builder is None:
+            continue
+        expr = spec.build_expr(_sample_params(spec))
+        for dtype in dtypes:
+            for shape3 in shapes:
+                for backend in backends:
+                    yield (f"{name}[{dtype},{shape3},{backend}]",
+                           expr, shape3, dtype, backend)
+
+
+def run_lint(ops=None, dtypes=DTYPES, shapes=SHAPES, backends=BACKENDS,
+             level="full", verbose=False, out=sys.stdout) -> Report:
+    from repro.api.compile import compile as api_compile
+
+    total = Report(subject="repro.analysis.lint")
+    # the bucketer fill audit is global (all supported dtypes), not
+    # restricted to the sweep matrix — it is cheap and shape-free
+    total.extend(dtype_checks.check_bucketer_fills())
+    n_cases = 0
+    for label, expr, shape3, dtype, backend in iter_registry_cases(
+            ops, dtypes, shapes, backends):
+        n_cases += 1
+        try:
+            exe = api_compile(expr, shape3, dtype, backend, verify=False)
+        except VerificationError as e:  # pragma: no cover - verify=False
+            total.extend(e.errors)
+            continue
+        report = verify_executable(exe, level=level)
+        if verbose or not report.ok:
+            print(f"{label}: {len(report.errors())} error(s), "
+                  f"{len(report.warnings())} warning(s)", file=out)
+        total.extend(report.findings)
+    print(f"lint: {n_cases} registry case(s) verified — "
+          f"{len(total.errors())} error(s), "
+          f"{len(total.warnings())} warning(s)", file=out)
+    return total
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="statically verify every registry operator across a "
+                    "dtype/shape/backend matrix",
+    )
+    p.add_argument("--ops", nargs="*", default=None,
+                   help="restrict to these registry ops (default: all)")
+    p.add_argument("--dtypes", nargs="*", default=list(DTYPES))
+    p.add_argument("--shapes", nargs="*", default=None,
+                   help="NxHxW triples, e.g. 4x48x96")
+    p.add_argument("--backends", nargs="*", default=list(BACKENDS),
+                   choices=["pallas", "xla"])
+    p.add_argument("--level", default="full", choices=["fast", "full"])
+    p.add_argument("--strict", action="store_true",
+                   help="treat warnings as errors")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="print every case, not only failing ones")
+    args = p.parse_args(argv)
+
+    shapes = SHAPES
+    if args.shapes:
+        shapes = tuple(tuple(int(v) for v in s.split("x"))
+                       for s in args.shapes)
+        if any(len(s) != 3 for s in shapes):
+            p.error("shapes must be NxHxW triples")
+
+    report = run_lint(ops=args.ops, dtypes=tuple(args.dtypes),
+                      shapes=shapes, backends=tuple(args.backends),
+                      level=args.level, verbose=args.verbose)
+    for f in report.findings:
+        print(f)
+    failed = report.errors() or (args.strict and report.warnings())
+    print("lint:", "FAILED" if failed else "ok")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

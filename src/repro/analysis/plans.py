@@ -1,0 +1,161 @@
+"""ChainPlan constraint checking + Mosaic-readiness diagnostics
+(check class c).
+
+Re-derives the planner/kernel contract from first principles and
+checks a plan against it — deliberately *not* by calling
+``ChainPlan.__post_init__`` (mutation tests forge plans past it with
+``object.__new__``, which is also what a deserialized or hand-built
+plan could do):
+
+* band decomposition: ``band_h % fuse_k == 0`` (the kernel runs
+  ``fuse_k`` elementary steps on a ``band_h + 2·fuse_k`` stack),
+  ``height_pad % band_h == 0``, ``n_bands·band_h == height_pad``;
+* ragged-width fallback: ``tile_w`` is 0 (row-only) or tiles the padded
+  width in ``fuse_k`` multiples — a ragged column tile would shift
+  every halo index map off the block grid;
+* requeue exactness: influence propagates at most ``fuse_k`` px per
+  chunk (Chebyshev), so ``fuse_k ≤ requeue_halo · band_h`` and, when
+  column-tiled, ``fuse_k ≤ requeue_halo · tile_w`` — otherwise a
+  wavefront outruns the re-activated neighbourhood and convergence is
+  detected too early;
+* compaction capacity within the activity grid.
+
+Mosaic-readiness (WARN, ROADMAP item 3): interpret-mode Pallas accepts
+any block geometry, but on-TPU Mosaic wants last-dim tiles in 128-lane
+multiples and sublane counts per dtype.  The diagnostics flag every
+block the 2-D tile kernels would feed Mosaic that violates that —
+``fuse_k``-wide corner/side halos, non-lane-multiple ``tile_w``/
+``width_pad``, patch widths ``tile_w + 2·fuse_k``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.findings import ERROR, WARN, Finding
+from repro.core.chain import LANES, SUBLANES
+
+__all__ = ["check_plan", "check_mosaic_readiness"]
+
+
+def check_plan(plan, shape3=None) -> list:
+    """Structural constraints of one :class:`ChainPlan`."""
+    out = []
+
+    def err(msg):
+        out.append(Finding("plan", ERROR, "plan", msg))
+
+    if plan.fuse_k < 1:
+        err(f"fuse_k={plan.fuse_k} < 1")
+        return out
+    if plan.band_h < plan.fuse_k:
+        err(f"band_h={plan.band_h} < fuse_k={plan.fuse_k}: the band "
+            "cannot carry one launch's halo")
+    if plan.band_h % plan.fuse_k:
+        err(f"band_h={plan.band_h} not a multiple of fuse_k="
+            f"{plan.fuse_k}: halo blocks would straddle band borders")
+    if plan.height_pad < 1 or plan.height_pad % plan.band_h:
+        err(f"height_pad={plan.height_pad} not a positive multiple of "
+            f"band_h={plan.band_h}")
+    elif plan.n_bands != plan.height_pad // plan.band_h:
+        err(f"n_bands={plan.n_bands} != height_pad/band_h="
+            f"{plan.height_pad // plan.band_h}")
+    if plan.width_pad < 1:
+        err(f"width_pad={plan.width_pad} < 1")
+    if plan.n_images < 1:
+        err(f"n_images={plan.n_images} < 1")
+    if plan.n_chunks < 1:
+        err(f"n_chunks={plan.n_chunks} < 1")
+
+    if plan.tile_w < 0:
+        err(f"tile_w={plan.tile_w} < 0")
+    elif plan.tile_w:
+        if plan.tile_w % plan.fuse_k:
+            err(f"tile_w={plan.tile_w} not a multiple of fuse_k="
+                f"{plan.fuse_k} (ragged-width plans must fall back to "
+                "tile_w=0 row bands)")
+        if plan.width_pad % plan.tile_w:
+            err(f"width_pad={plan.width_pad} not a multiple of tile_w="
+                f"{plan.tile_w} (ragged last tile; the fallback "
+                "contract is tile_w=0)")
+
+    if plan.requeue_halo < 1:
+        err(f"requeue_halo={plan.requeue_halo} < 1: changed cells "
+            "would not re-activate their neighbours")
+    else:
+        reach = plan.fuse_k  # Chebyshev influence per K-chunk
+        if reach > plan.requeue_halo * plan.band_h:
+            err(f"fuse_k={plan.fuse_k} exceeds requeue_halo·band_h="
+                f"{plan.requeue_halo * plan.band_h}: per-chunk influence "
+                "outruns the re-activated rows — convergence would be "
+                "detected early")
+        if plan.tile_w and reach > plan.requeue_halo * plan.tile_w:
+            err(f"fuse_k={plan.fuse_k} exceeds requeue_halo·tile_w="
+                f"{plan.requeue_halo * plan.tile_w}: per-chunk influence "
+                "outruns the re-activated columns")
+
+    if not 0.0 <= plan.compact_threshold <= 1.0:
+        err(f"compact_threshold={plan.compact_threshold} outside [0, 1]")
+    elif plan.compact_threshold and plan.band_h and plan.width_pad:
+        try:
+            cap = plan.compact_capacity
+        except Exception:  # degenerate fields above already reported
+            cap = None
+        if cap is not None and not 1 <= cap <= max(1, plan.total_tiles):
+            err(f"compact_capacity={cap} outside [1, total_tiles="
+                f"{plan.total_tiles}]")
+
+    if shape3 is not None:
+        n, h, w = shape3
+        if plan.n_images != n:
+            out.append(Finding("plan", ERROR, "plan/shape",
+                               f"n_images={plan.n_images} != batch {n}"))
+        if plan.height_pad < h:
+            out.append(Finding("plan", ERROR, "plan/shape",
+                               f"height_pad={plan.height_pad} < image "
+                               f"height {h}"))
+        if plan.width_pad < w:
+            out.append(Finding("plan", ERROR, "plan/shape",
+                               f"width_pad={plan.width_pad} < image "
+                               f"width {w}"))
+    return out
+
+
+def check_mosaic_readiness(plan, dtype=None) -> list:
+    """WARN-level diagnostics for on-TPU (interpret=False) lowering —
+    the known PR 4 blocker tracked as ROADMAP item 3."""
+    out = []
+
+    def warn(subject, msg):
+        out.append(Finding("plan", WARN, subject, msg))
+
+    if plan.width_pad % LANES:
+        warn("mosaic/width",
+             f"width_pad={plan.width_pad} is not a {LANES}-lane multiple")
+    if plan.tile_w:
+        if plan.tile_w % LANES:
+            warn("mosaic/tile",
+                 f"tile_w={plan.tile_w} is not a {LANES}-lane multiple "
+                 "(centre blocks of the 2-D tile kernels)")
+        if plan.fuse_k % LANES:
+            warn("mosaic/halo",
+                 f"corner/side halo blocks are fuse_k={plan.fuse_k} "
+                 f"lanes wide — narrower than the {LANES}-lane tiling "
+                 "Mosaic wants (tile_specs NOTE; widen or re-fetch for "
+                 "interpret=False)")
+        if (plan.tile_w + 2 * plan.fuse_k) % LANES:
+            warn("mosaic/patch",
+                 f"compact patch width tile_w+2K="
+                 f"{plan.tile_w + 2 * plan.fuse_k} is not a {LANES}-lane "
+                 "multiple (gathered workspace of the compact kernels)")
+    if dtype is not None:
+        sub = SUBLANES.get(np.dtype(dtype).itemsize, 8)
+        if plan.fuse_k % sub:
+            warn("mosaic/sublane",
+                 f"fuse_k={plan.fuse_k} not a multiple of the "
+                 f"{np.dtype(dtype).name} sublane count {sub} (halo "
+                 "blocks straddle sublane tiles)")
+        if plan.band_h % sub:
+            warn("mosaic/sublane",
+                 f"band_h={plan.band_h} not a multiple of the "
+                 f"{np.dtype(dtype).name} sublane count {sub}")
+    return out

@@ -1,0 +1,62 @@
+"""Verification orchestration: one executable in, one report out.
+
+Two levels:
+
+``fast``
+    the always-on compile hook (``api/compile.py`` runs it on every
+    cache-miss build when ``REPRO_VERIFY`` is enabled — the test suite
+    turns it on in ``conftest.py``).  Pure-Python structural proofs
+    only: program well-formedness + pad-state discipline, plan
+    constraints, reach coverage, executable-bound dtype facts.
+    Micro-seconds per compile; no spec evaluation, no key mutation.
+``full``
+    everything ``fast`` proves, plus numeric index-map enumeration over
+    the plan's whole grid, cache-key mutation sweeps, and the
+    Mosaic-readiness diagnostics.  This is what the lint CLI and the
+    mutation self-tests run.
+
+The functions never execute the compiled program — every fact is read
+off the lowered ``Program``, the ``ChainPlan`` and the ``BlockSpec``
+geometry.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.analysis import cachekeys, dtypes, halo, indexmaps, plans
+from repro.analysis.findings import Report
+
+__all__ = ["verify_executable", "verify_on_compile", "LEVELS"]
+
+LEVELS = ("fast", "full")
+
+
+def verify_executable(exe, level: str = "fast") -> Report:
+    """Statically verify one :class:`~repro.api.executable.Executable`."""
+    if level not in LEVELS:
+        raise ValueError(f"level must be one of {LEVELS}, got {level!r}")
+    shape3 = (exe.n_images, exe.height, exe.width)
+    report = Report(subject=repr(exe))
+
+    report.extend(halo.check_program(exe.program))
+    report.extend(dtypes.check_executable_dtypes(exe))
+    if exe.plan is not None:
+        report.extend(plans.check_plan(exe.plan, shape3))
+        report.extend(halo.check_coverage(exe.program, exe.plan, shape3))
+
+    if level == "full":
+        if exe.plan is not None:
+            report.extend(indexmaps.check_plan_index_maps(exe.plan))
+            report.extend(plans.check_mosaic_readiness(exe.plan, exe.dtype))
+            report.extend(cachekeys.check_plan_key(exe.plan))
+        report.extend(cachekeys.check_executable_key(exe))
+    return report
+
+
+def verify_on_compile() -> bool:
+    """Is the compile-time hook enabled?  Controlled by ``REPRO_VERIFY``
+    (unset/"0"/"off"/"false" → disabled).  ``tests/conftest.py`` enables
+    it for the whole suite, so every executable any test compiles is
+    verified for free."""
+    return os.environ.get("REPRO_VERIFY", "0").lower() \
+        not in ("0", "", "off", "false", "no")

@@ -41,7 +41,8 @@ _misses = 0
 
 
 def compile(expr: Expr, shape, dtype, backend: str | None = None, *,
-            plan=None, max_chunks: int | None = None) -> Executable:
+            plan=None, max_chunks: int | None = None,
+            verify: bool | None = None) -> Executable:
     """Lower ``expr`` and bind it to a concrete (shape, dtype, backend).
 
     ``shape`` is ``(H, W)`` (the executable then takes and returns 2-D
@@ -49,6 +50,14 @@ def compile(expr: Expr, shape, dtype, backend: str | None = None, *,
     the derived :class:`~repro.core.chain.ChainPlan` (Pallas backend
     only; validated against the shape); ``max_chunks`` caps the
     convergence-driven segments' K-chunk iterations.
+
+    ``verify`` controls the static verifier hook
+    (``repro.analysis.verifier:verify_executable`` at the cheap "fast"
+    level, cache-miss builds only): ``None`` defers to the
+    ``REPRO_VERIFY`` environment toggle (the test suite turns it on),
+    ``True``/``False`` force it.  An ERROR-severity finding raises
+    ``repro.analysis.findings:VerificationError`` before the executable
+    enters the cache.
     """
     if isinstance(expr, Pipe):
         raise TypeError(
@@ -78,6 +87,15 @@ def compile(expr: Expr, shape, dtype, backend: str | None = None, *,
         _misses += 1
 
     exe = _build(expr, shape3, was_2d, dtype, backend, plan, max_chunks)
+    if verify or verify is None:
+        # local import: analysis sits above api in the layering
+        from repro.analysis.verifier import (
+            verify_executable,
+            verify_on_compile,
+        )
+
+        if verify or verify_on_compile():
+            verify_executable(exe, level="fast").raise_if_errors()
     with _lock:
         _cache[key] = exe
         while len(_cache) > CACHE_CAPACITY:

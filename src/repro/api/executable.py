@@ -60,6 +60,7 @@ class Executable:
         self.dtype = jnp.dtype(dtype)
         self.backend = backend
         self.plan = plan
+        self.max_chunks = max_chunks
         self.was_2d = was_2d
         if plan is not None:
             k = plan.fuse_k
@@ -71,9 +72,14 @@ class Executable:
                 max_chunks if max_chunks is not None
                 else max(self.height, self.width) // k + 2
             )
+        # Every field that can change what a call computes or returns
+        # must appear here — ``repro.analysis.cachekeys`` perturbs each
+        # one and asserts the key moves (``max_chunks`` truncates
+        # convergent segments; ``was_2d`` changes the output rank).
         self.key = (
             program.run_sig, shape3, str(self.dtype), backend,
             plan.key if plan is not None else None,
+            max_chunks, was_2d,
         )
 
     # -- public ------------------------------------------------------------
@@ -176,7 +182,7 @@ class Executable:
 
     def _run_xla(self, canonical):
         vals = {}
-        for slot, x3 in enumerate(canonical):
+        for slot, x3 in zip(self.program.run_input_slots, canonical):
             vals[slot] = x3
         for seg in self.program.segments:
             if seg.kind == "refill":       # no padding exists to refill
@@ -220,8 +226,8 @@ class Executable:
 
         plan = self.plan
         vals = {}
-        for slot, (x, fill) in enumerate(
-                zip(canonical, self.program.run_fills)):
+        for slot, x, fill in zip(self.program.run_input_slots, canonical,
+                                 self.program.run_fills):
             x3 = x[None] if x.ndim == 2 else x
             vals[slot] = _stacked(_pad(x3, plan, _fill_value(fill, x.dtype)))
         for seg in self.program.segments:

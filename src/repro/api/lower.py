@@ -73,6 +73,7 @@ class Program:
     input_names: tuple               # user-facing leaves, DFS-preorder
     prepare: tuple                   # pre-Expr per canonical run input
     run_fills: tuple                 # "hi"/"lo" per canonical run input
+    run_input_slots: tuple           # slot id per canonical run input
     segments: tuple                  # RunSeg, in execution order
     run_outputs: tuple               # slot ids cropped and handed to finalize
     kernel_outputs: tuple            # ((kernel Expr, out_idx, slot), ...)
@@ -82,7 +83,7 @@ class Program:
     def run_sig(self) -> tuple:
         """Hashable identity of the run phase (bucket/cache keying)."""
         return (
-            ("in", self.run_fills),
+            ("in", self.run_input_slots, self.run_fills),
             *((s.kind, s.params, s.srcs, s.dsts) for s in self.segments),
             ("out", self.run_outputs),
         )
@@ -186,6 +187,7 @@ class _Lowerer:
         self.segments: list[RunSeg] = []
         self.prepare: list[Expr] = []
         self.fills: list[str] = []
+        self.input_slots: list[int] = []
         self.pre_slot: dict[Expr, int] = {}
         self.kernel_slots: dict[Expr, tuple] = {}
         self.pad_state: dict[int, str | None] = {}
@@ -203,10 +205,16 @@ class _Lowerer:
         if _is_pre(node):
             slot = self.pre_slot.get(node)
             if slot is None:
+                # NB: prepare slots are *not* guaranteed to be 0..n-1 —
+                # a fresh prepare leaf first requested after a kernel
+                # allocation (e.g. the mask of geodesic(erode(a), b))
+                # lands on a later slot id, which is why the executable
+                # binds canonical inputs through ``run_input_slots``.
                 slot = self._alloc(fill)
                 self.pre_slot[node] = slot
                 self.prepare.append(node)
                 self.fills.append(fill)
+                self.input_slots.append(slot)
         else:
             slot = self._kernel(node)[0]
         if self.pad_state[slot] == fill:
@@ -288,6 +296,7 @@ class _Lowerer:
             input_names=_input_names(self.root),
             prepare=tuple(self.prepare),
             run_fills=tuple(self.fills),
+            run_input_slots=tuple(self.input_slots),
             segments=tuple(self.segments),
             run_outputs=tuple(slot for _, _, slot in kernel_outputs),
             kernel_outputs=kernel_outputs,

@@ -28,7 +28,8 @@ def chain(f: jnp.ndarray, n: int, op: str = "erode") -> jnp.ndarray:
     return f
 
 
-def reconstruct(f: jnp.ndarray, m: jnp.ndarray, op: str = "erode") -> jnp.ndarray:
+def reconstruct(f: jnp.ndarray, m: jnp.ndarray,
+                op: str = "erode") -> jnp.ndarray:
     """Reconstruction with per-iteration host-side convergence check."""
     step = _geo_erode1 if op == "erode" else _geo_dilate1
     while True:

@@ -55,7 +55,7 @@ class ModelConfig:
     moe: MoEConfig | None = None
 
     # hybrid / ssm
-    block_pattern: tuple[str, ...] | None = None  # cycled, e.g. ("mlstm","slstm")
+    block_pattern: tuple[str, ...] | None = None  # e.g. ("mlstm", "slstm")
     ssm_state: int = 0
     ssm_head_dim: int = 64
     shared_attn_period: int = 0   # zamba2: one *shared-weight* attn block
@@ -140,7 +140,8 @@ class ModelConfig:
         if self.moe is not None:
             m = self.moe
             expert = d * m.d_expert * 3
-            per_moe = m.n_experts * expert + m.n_shared * expert + d * m.n_experts
+            per_moe = (m.n_experts * expert + m.n_shared * expert
+                       + d * m.n_experts)
             if m.dense_residual_ff:
                 per_moe += d * m.dense_residual_ff * 3
             total += self.n_layers * per_moe

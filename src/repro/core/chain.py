@@ -96,7 +96,8 @@ class ChainPlan:
         # ChainPlan).
         if self.band_h % self.fuse_k:
             raise ValueError(
-                f"band_h={self.band_h} must be a multiple of fuse_k={self.fuse_k}"
+                f"band_h={self.band_h} must be a multiple of "
+                f"fuse_k={self.fuse_k}"
             )
         if self.height_pad % self.band_h:
             raise ValueError(

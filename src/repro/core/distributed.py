@@ -23,7 +23,6 @@ changed flags — the collective version of the paper's ``converged`` flag
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
@@ -176,7 +175,8 @@ def distributed_reconstruct(
         from repro.kernels import ops
 
         k = fuse_k or plan_chain(
-            f_loc.shape[0], f_loc.shape[1], f_loc.dtype, None, n_images_resident=2
+            f_loc.shape[0], f_loc.shape[1], f_loc.dtype, None,
+            n_images_resident=2
         ).fuse_k
         fill = ident_for(op, f_loc.dtype)
         # the mask halo is constant: exchange it once, reuse every chunk

@@ -13,8 +13,6 @@ grad (where meaningful) and shard cleanly.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -184,7 +182,8 @@ def _reconstruct(f, m, step, max_iters):
 def erode_reconstruct(
     f: jnp.ndarray, m: jnp.ndarray, max_iters: int | None = None
 ) -> jnp.ndarray:
-    """ε_recᵐ(f): erosion by reconstruction (Eq. 5). Marker f, mask m, f ≥ m."""
+    """ε_recᵐ(f): erosion by reconstruction (Eq. 5); marker f, mask m,
+    f ≥ m."""
     if max_iters is None:
         max_iters = f.shape[-1] * f.shape[-2]
     out, _ = _reconstruct(f, m, geodesic_erode1, max_iters)

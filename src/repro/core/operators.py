@@ -228,7 +228,8 @@ def qdt_raw(f: jnp.ndarray, max_s: int | None = None):
     """
     if max_s is None:
         max_s = max(f.shape[-1], f.shape[-2])
-    acc = jnp.float32 if jnp.issubdtype(f.dtype, jnp.floating) else jnp.int32
+    from repro.kernels.common import qdt_acc_dtype
+    acc = qdt_acc_dtype(f.dtype)
 
     def body(state):
         cur, d, r, j, changed = state
@@ -250,7 +251,8 @@ def qdt_raw(f: jnp.ndarray, max_s: int | None = None):
     return d, r
 
 
-def qdt_regularize(d: jnp.ndarray, max_iters: int | None = None) -> jnp.ndarray:
+def qdt_regularize(d: jnp.ndarray,
+                   max_iters: int | None = None) -> jnp.ndarray:
     """η-iteration (Eq. 14) until d is 1-Lipschitz (Eq. 15)."""
     if max_iters is None:
         max_iters = d.shape[-1] * d.shape[-2]

@@ -34,6 +34,31 @@ def tile_edges(j, n_tiles: int):
     return j == 0, j == n_tiles - 1
 
 
+def row_specs(band_h: int, fuse_k: int, h: int, w: int):
+    """The three BlockSpecs feeding one full-width row band of a 1-D
+    grid its K-row top halo, centre band and K-row bottom halo, in
+    (top, mid, bot) order.  Halo index maps clamp at the array border;
+    the kernels pin clamped out-of-image reads to the lattice identity
+    (``image_edges``).  Shared by every row-band kernel
+    (``erode_chain``, ``geodesic_chain``, ``qdt_chain``) and evaluated
+    symbolically by ``repro.analysis.indexmaps`` — the bounds the
+    verifier proves are the bounds the kernels run with.
+    """
+    r = band_h // fuse_k   # fuse_k-row halo blocks per band
+    last_k_block = h // fuse_k - 1
+    return [
+        # K-row halo above the band (clamped at the stack top)
+        pl.BlockSpec((fuse_k, w), lambda i: (jnp.maximum(i * r - 1, 0), 0)),
+        # the band itself
+        pl.BlockSpec((band_h, w), lambda i: (i, 0)),
+        # K-row halo below the band (clamped at the stack bottom)
+        pl.BlockSpec(
+            (fuse_k, w),
+            lambda i: (jnp.minimum((i + 1) * r, last_k_block), 0),
+        ),
+    ]
+
+
 def tile_specs(band_h: int, tile_w: int, fuse_k: int, h: int, w: int):
     """The nine BlockSpecs feeding one (band_h, tile_w) cell of a 2-D
     grid its centre block and eight clamped neighbour halos, in
@@ -108,6 +133,19 @@ def assemble_tile(parts, edges, ident):
         jnp.where(jnp.logical_or(at_bot, at_rt), ident, br[...]),
     ], axis=1)
     return jnp.concatenate([row_t, row_m, row_b], axis=0)
+
+
+def qdt_acc_dtype(dtype):
+    """Residual-accumulator dtype of the quasi-distance transform: the
+    paper's convention is float32 for floating images and int32
+    otherwise.  This is the single source of truth — the Pallas QDT
+    kernels, the requeue driver and the jnp oracle (``operators.qdt_raw``)
+    all call it, which is what keeps the two engines' accumulation
+    bit-identical (and what ``repro.analysis.dtypes`` audits for
+    overflow headroom per supported dtype).
+    """
+    return (jnp.float32 if jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+            else jnp.int32)
 
 
 def ident_for(op: str, dtype):

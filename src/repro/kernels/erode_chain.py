@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import elementary_3x3, ident_for, image_edges
+from repro.kernels.common import (elementary_3x3, ident_for, image_edges,
+                                  row_specs)
 
 
 def _chain_kernel(x_top, x_mid, x_bot, out, *, op: str, fuse_k: int,
@@ -78,28 +79,14 @@ def chain_step(
     if bands_per_image is None:
         bands_per_image = n_bands
     assert n_bands % bands_per_image == 0
-    r = band_h // fuse_k  # halo blocks (K rows) per band
 
     kern = functools.partial(_chain_kernel, op=op, fuse_k=fuse_k,
                              band_h=band_h, bands_per_image=bands_per_image)
-    last_k_block = h // fuse_k - 1
 
     return pl.pallas_call(
         kern,
         grid=(n_bands,),
-        in_specs=[
-            # K-row halo above the band (clamped at the image top)
-            pl.BlockSpec(
-                (fuse_k, w), lambda i: (jnp.maximum(i * r - 1, 0), 0)
-            ),
-            # the band itself
-            pl.BlockSpec((band_h, w), lambda i: (i, 0)),
-            # K-row halo below the band (clamped at the image bottom)
-            pl.BlockSpec(
-                (fuse_k, w),
-                lambda i: (jnp.minimum((i + 1) * r, last_k_block), 0),
-            ),
-        ],
+        in_specs=row_specs(band_h, fuse_k, h, w),
         out_specs=pl.BlockSpec((band_h, w), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
         interpret=interpret,

@@ -52,7 +52,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.common import (assemble_tile, elementary_3x3, ident_for,
-                                  image_edges, tile_edges, tile_specs)
+                                  image_edges, row_specs, tile_edges,
+                                  tile_specs)
 
 
 def _geodesic_kernel(
@@ -124,15 +125,9 @@ def geodesic_chain_step(
     assert n_bands % bands_per_image == 0
     if active is None:
         active = jnp.ones((n_bands, 1), jnp.int32)
-    r = band_h // fuse_k
-    last_k_block = h // fuse_k - 1
 
     act_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
-    top_spec = pl.BlockSpec((fuse_k, w), lambda i: (jnp.maximum(i * r - 1, 0), 0))
-    mid_spec = pl.BlockSpec((band_h, w), lambda i: (i, 0))
-    bot_spec = pl.BlockSpec(
-        (fuse_k, w), lambda i: (jnp.minimum((i + 1) * r, last_k_block), 0)
-    )
+    plane = row_specs(band_h, fuse_k, h, w)
 
     kern = functools.partial(
         _geodesic_kernel, op=op, fuse_k=fuse_k, band_h=band_h,
@@ -141,8 +136,7 @@ def geodesic_chain_step(
     out, changed = pl.pallas_call(
         kern,
         grid=(n_bands,),
-        in_specs=[act_spec, top_spec, mid_spec, bot_spec,
-                  top_spec, mid_spec, bot_spec],
+        in_specs=[act_spec] + plane + plane,
         out_specs=[
             pl.BlockSpec((band_h, w), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),

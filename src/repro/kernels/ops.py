@@ -77,7 +77,7 @@ from repro.core import morphology as M
 from repro.core.backend import (Backend, canonicalize_backend,
                                 warn_legacy_kwargs)
 from repro.core.chain import ChainPlan, plan_chain
-from repro.kernels.common import ident_for
+from repro.kernels.common import ident_for, qdt_acc_dtype
 from repro.kernels.erode_chain import chain_step
 from repro.kernels.geodesic_chain import (geodesic_chain_step,
                                           geodesic_compact_step,
@@ -225,7 +225,8 @@ def _cell_view(x2: jnp.ndarray, plan: ChainPlan) -> jnp.ndarray:
             .transpose(0, 2, 1, 3).reshape(-1, bh, tw))
 
 
-def _gather_mid(x2: jnp.ndarray, idx: jnp.ndarray, plan: ChainPlan) -> jnp.ndarray:
+def _gather_mid(x2: jnp.ndarray, idx: jnp.ndarray,
+                plan: ChainPlan) -> jnp.ndarray:
     """Gather the centre windows of cells ``idx`` → (C·band_h, tile_w)."""
     cells = jnp.take(_cell_view(x2, plan), idx, axis=0, mode="clip")
     return cells.reshape(-1, _cell_tile_w(plan))
@@ -320,27 +321,31 @@ def _compile_unary(build, f, backend, name):
     return exe(f)
 
 
-def erode(f: jnp.ndarray, s: int, backend: Backend | None = None) -> jnp.ndarray:
+def erode(f: jnp.ndarray, s: int,
+          backend: Backend | None = None) -> jnp.ndarray:
     """ε_s via a chain of s elementary erosions (Eq. 4 decomposition)."""
     api = _api()
     return _compile_unary(lambda x: api.E.erode(s, x), f, backend,
                           "kernels.ops.erode")
 
 
-def dilate(f: jnp.ndarray, s: int, backend: Backend | None = None) -> jnp.ndarray:
+def dilate(f: jnp.ndarray, s: int,
+           backend: Backend | None = None) -> jnp.ndarray:
     api = _api()
     return _compile_unary(lambda x: api.E.dilate(s, x), f, backend,
                           "kernels.ops.dilate")
 
 
-def opening(f: jnp.ndarray, s: int, backend: Backend | None = None) -> jnp.ndarray:
+def opening(f: jnp.ndarray, s: int,
+            backend: Backend | None = None) -> jnp.ndarray:
     """γ_s = δ_s ∘ ε_s — compiled as one two-segment padded program."""
     api = _api()
     return _compile_unary(lambda x: api.E.opening(s, x), f, backend,
                           "kernels.ops.opening")
 
 
-def closing(f: jnp.ndarray, s: int, backend: Backend | None = None) -> jnp.ndarray:
+def closing(f: jnp.ndarray, s: int,
+            backend: Backend | None = None) -> jnp.ndarray:
     api = _api()
     return _compile_unary(lambda x: api.E.closing(s, x), f, backend,
                           "kernels.ops.closing")
@@ -526,7 +531,8 @@ def _drive_scheduler(
         key0,
         val0,
     )
-    data, _, it, _, asum, per_chunk, _, _ = jax.lax.while_loop(cond, body, init)
+    data, _, it, _, asum, per_chunk, _, _ = jax.lax.while_loop(
+        cond, body, init)
     return data, it, asum, per_chunk
 
 
@@ -681,7 +687,7 @@ def _scheduled_qdt(fp, plan: ChainPlan, max_chunks: int):
     convention (float32 for float images, int32 otherwise).
     """
     k = plan.fuse_k
-    acc = jnp.float32 if jnp.issubdtype(fp.dtype, jnp.floating) else jnp.int32
+    acc = qdt_acc_dtype(fp.dtype)
     ident = ident_for("erode", fp.dtype)
     rp = jnp.zeros(fp.shape, acc)
     dp = jnp.zeros(fp.shape, jnp.int32)

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.common import (assemble_tile, elementary_3x3, ident_for,
-                                  image_edges, tile_edges, tile_specs)
+                                  image_edges, qdt_acc_dtype, row_specs,
+                                  tile_edges, tile_specs)
 
 
 def _qdt_update(stack, r, d, j0, window, *, fuse_k: int, acc_dtype):
@@ -51,7 +52,8 @@ def _qdt_update(stack, r, d, j0, window, *, fuse_k: int, acc_dtype):
 
 
 def _qdt_kernel(
-    base, active, f_top, f_mid, f_bot, r_in, d_in, f_out, r_out, d_out, changed,
+    base, active, f_top, f_mid, f_bot, r_in, d_in, f_out, r_out, d_out,
+    changed,
     *, fuse_k: int, band_h: int, acc_dtype, bands_per_image: int,
 ):
     # ``base`` is blocked per band: each band reads the elementary-erosion
@@ -123,16 +125,10 @@ def qdt_chain_step(
     if base.shape == (1, 1):
         base = jnp.broadcast_to(base, (n_bands, 1))
     assert base.shape == (n_bands, 1)
-    rr = band_h // fuse_k
-    last_k_block = h // fuse_k - 1
-    acc_dtype = jnp.float32 if jnp.issubdtype(f.dtype, jnp.floating) else jnp.int32
+    acc_dtype = qdt_acc_dtype(f.dtype)
     assert r.dtype == acc_dtype and d.dtype == jnp.int32
 
-    top_spec = pl.BlockSpec((fuse_k, w), lambda i: (jnp.maximum(i * rr - 1, 0), 0))
-    mid_spec = pl.BlockSpec((band_h, w), lambda i: (i, 0))
-    bot_spec = pl.BlockSpec(
-        (fuse_k, w), lambda i: (jnp.minimum((i + 1) * rr, last_k_block), 0)
-    )
+    top_spec, mid_spec, bot_spec = row_specs(band_h, fuse_k, h, w)
     flag_spec = pl.BlockSpec((1, 1), lambda i: (i, 0))
 
     kern = functools.partial(
@@ -226,7 +222,7 @@ def qdt_tile_step(
     if base.shape == (1, 1):
         base = jnp.broadcast_to(base, (n_bands, n_tiles))
     assert base.shape == (n_bands, n_tiles)
-    acc_dtype = jnp.float32 if jnp.issubdtype(f.dtype, jnp.floating) else jnp.int32
+    acc_dtype = qdt_acc_dtype(f.dtype)
     assert r.dtype == acc_dtype and d.dtype == jnp.int32
 
     flag_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
@@ -307,7 +303,7 @@ def qdt_compact_step(
     assert f_patch.shape[1] == tile_w + 2 * fuse_k
     assert f_patch.shape[0] % ph == 0
     cap = f_patch.shape[0] // ph
-    acc_dtype = jnp.float32 if jnp.issubdtype(f_patch.dtype, jnp.floating) else jnp.int32
+    acc_dtype = qdt_acc_dtype(f_patch.dtype)
     assert r_mid.dtype == acc_dtype and d_mid.dtype == jnp.int32
     assert r_mid.shape == d_mid.shape == (cap * band_h, tile_w)
     if base.shape == (1, 1):

@@ -28,14 +28,16 @@ def chain(f: jnp.ndarray, n: int, op: str) -> jnp.ndarray:
     return erode(f, n) if op == "erode" else dilate(f, n)
 
 
-def geodesic_chain(f: jnp.ndarray, m: jnp.ndarray, n: int, op: str) -> jnp.ndarray:
+def geodesic_chain(f: jnp.ndarray, m: jnp.ndarray, n: int,
+                   op: str) -> jnp.ndarray:
     """n elementary geodesic filters — oracle for geodesic_chain_step."""
     if op == "erode":
         return geodesic_erode(f, m, n)
     return geodesic_dilate(f, m, n)
 
 
-def qdt_chunk(f: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray, base: int, n: int):
+def qdt_chunk(f: jnp.ndarray, r: jnp.ndarray, d: jnp.ndarray, base: int,
+              n: int):
     """n QDT erosion steps with residual/distance update — oracle for
     qdt_chain_step."""
     acc = r.dtype

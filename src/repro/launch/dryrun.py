@@ -18,7 +18,6 @@ mesh.
 """  # noqa: E402
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback

@@ -12,7 +12,7 @@ import glob
 import json
 import os
 
-from repro.launch.analytic import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.launch.analytic import PEAK_FLOPS
 
 
 def load(directory: str) -> list[dict]:

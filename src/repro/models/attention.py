@@ -29,7 +29,8 @@ class AttnDims(NamedTuple):
     head_dim: int
 
 
-def attn_init(key, d: int, dims: AttnDims, dtype, qkv_bias=False, qk_norm=False):
+def attn_init(key, d: int, dims: AttnDims, dtype, qkv_bias=False,
+              qk_norm=False):
     h, kv, hd = dims
     ks = jax.random.split(key, 4)
     p = {
@@ -60,9 +61,12 @@ def qkv(params, x, dims: AttnDims, positions, rope_theta, qk_norm=False,
     v = x @ params["wv"]
     if "bq" in params:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
-    q = constrain(q.reshape(b, s, h, hd), ("batch", None, "model", None), free=True)
-    k = constrain(k.reshape(b, s, kv_h, hd), ("batch", None, "model", None), free=True)
-    v = constrain(v.reshape(b, s, kv_h, hd), ("batch", None, "model", None), free=True)
+    q = constrain(q.reshape(b, s, h, hd),
+                  ("batch", None, "model", None), free=True)
+    k = constrain(k.reshape(b, s, kv_h, hd),
+                  ("batch", None, "model", None), free=True)
+    v = constrain(v.reshape(b, s, kv_h, hd),
+                  ("batch", None, "model", None), free=True)
     if qk_norm:
         q = rmsnorm(params["q_norm"], q)
         k = rmsnorm(params["k_norm"], k)

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 def normal_init(key, shape, dtype, scale: float | None = None):
     fan_in = shape[0] if len(shape) > 1 else 1
     std = scale if scale is not None else 1.0 / math.sqrt(max(1, fan_in))
-    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+    out = jax.random.truncated_normal(key, -2.0, 2.0, shape) * std
+    return out.astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -56,7 +57,8 @@ def mlp(params: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
     if activation == "silu":
         h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
     elif activation == "geglu":
-        h = jax.nn.gelu(x @ params["gate"], approximate=True) * (x @ params["up"])
+        h = (jax.nn.gelu(x @ params["gate"], approximate=True)
+             * (x @ params["up"]))
     else:
         h = jax.nn.gelu(x @ params["up"], approximate=True)
     if h.ndim == 3:

@@ -14,7 +14,6 @@ prefill produced.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -118,7 +117,8 @@ def _stack_init(key, cfg: ModelConfig, depth: int, cross: bool):
 
     def group_params(g):
         return tuple(
-            _layer_init(keys[g * period + j], cfg, cfg.layer_kind(g * period + j),
+            _layer_init(keys[g * period + j], cfg,
+                        cfg.layer_kind(g * period + j),
                         jnp.dtype(cfg.param_dtype), cross)
             for j in range(period)
         )

@@ -39,7 +39,8 @@ def moe_init(key, d: int, cfg: MoEConfig, activation: str, dtype) -> dict:
     if cfg.n_shared:
         p["shared"] = mlp_init(ks[4], d, cfg.n_shared * f, activation, dtype)
     if cfg.dense_residual_ff:
-        p["dense"] = mlp_init(ks[5], d, cfg.dense_residual_ff, activation, dtype)
+        p["dense"] = mlp_init(ks[5], d, cfg.dense_residual_ff,
+                              activation, dtype)
     return p
 
 

@@ -13,8 +13,6 @@ of 4.  These do not change the FLOP/byte profile the roofline reads.
 """
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 

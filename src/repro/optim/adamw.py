@@ -10,8 +10,6 @@ EXPERIMENTS.md §Dry-run).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -80,7 +80,8 @@ class ServeMetrics:
     @staticmethod
     def _percentiles(lat_s) -> dict:
         if not lat_s:
-            return {"p50_ms": 0.0, "p90_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+            return {"p50_ms": 0.0, "p90_ms": 0.0, "p99_ms": 0.0,
+                    "mean_ms": 0.0}
         a = np.asarray(lat_s) * 1e3
         return {
             "p50_ms": float(np.percentile(a, 50)),

@@ -72,7 +72,8 @@ class ParamSpec:
             )
         if self.min is not None and value < self.min:
             raise ValueError(
-                f"op {op!r}: param {name!r} must be >= {self.min}, got {value!r}"
+                f"op {op!r}: param {name!r} must be >= {self.min}, "
+                f"got {value!r}"
             )
         return value
 
@@ -102,7 +103,7 @@ class OpSpec:
     name: str
     params: Mapping[str, ParamSpec]
     expr_builder: Callable | None = None   # params dict -> Expr
-    run: Callable | None = None            # custom: (inputs, params, backend, plan)
+    run: Callable | None = None    # custom: (inputs, params, backend, plan)
     arity: int = 1           # image inputs per request (user-facing)
     n_inputs: int | None = None  # canonical inputs after prepare (None=arity)
     n_outputs: int = 1

@@ -6,9 +6,6 @@ dry-run lowers exactly what trains.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
-
 import jax
 import jax.numpy as jnp
 

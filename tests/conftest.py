@@ -1,5 +1,12 @@
+import os
+
 import numpy as np
 import pytest
+
+# Every executable compiled anywhere in the suite goes through the
+# fast-level static verifier (repro.analysis) — an ERROR-severity
+# finding fails the compiling test with a VerificationError.
+os.environ.setdefault("REPRO_VERIFY", "1")
 
 
 @pytest.fixture

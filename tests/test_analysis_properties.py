@@ -1,0 +1,74 @@
+"""Property test: for random expression graphs, the lowering + planner
+always satisfy the static verifier's independently derived proofs —
+pad-state discipline holds, the derived plan's pad/halo/launch budget
+covers the verifier's computed Chebyshev reach, and the real BlockSpec
+index maps stay in bounds over the full grid.
+
+Gated on Hypothesis (not installed in every environment); the
+deterministic mutation coverage lives in ``tests/test_analysis.py``.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis",
+                                 reason="hypothesis not installed")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro import analysis as A  # noqa: E402
+from repro.analysis.halo import segment_reach  # noqa: E402
+from repro.api import E  # noqa: E402
+from repro.api.compile import compile as compile_expr  # noqa: E402
+
+pytestmark = pytest.mark.pipeline
+
+
+def _leaf(name):
+    return E.input(name)
+
+
+_leaves = st.sampled_from(["f", "g"]).map(_leaf)
+
+
+def _extend(children):
+    chains = st.tuples(st.sampled_from(["erode", "dilate"]),
+                       st.integers(1, 9), children)
+    recons = st.tuples(st.sampled_from(["erode", "dilate"]),
+                       children, children)
+    return st.one_of(
+        chains.map(lambda t: getattr(E, t[0])(t[1], t[2])),
+        recons.map(lambda t: E.reconstruct(t[1], t[2], op=t[0])),
+    )
+
+
+_exprs = st.recursive(_leaves, _extend, max_leaves=4)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(expr=_exprs, shape=st.sampled_from([(1, 40, 72), (2, 33, 70)]))
+def test_lowering_satisfies_static_proofs(expr, shape):
+    if expr.kind == "input":
+        return  # nothing lowered: no run phase to verify
+    exe = compile_expr(expr, shape, "uint8", "pallas", verify=False)
+
+    # pad-state discipline: re-proved independently of the lowerer
+    assert A.check_program(exe.program) == [], expr
+
+    if exe.plan is None:
+        return
+    plan, shape3 = exe.plan, shape
+
+    # plan constraints + shape coverage (pad >= image)
+    assert [f for f in A.check_plan(plan, shape3)
+            if f.severity == A.ERROR] == [], expr
+
+    # the derived launch budget covers the verifier's computed reach:
+    # check_coverage must not even warn for a freshly derived plan
+    assert A.check_coverage(exe.program, plan, shape3) == [], expr
+    reach = max((r for s in exe.program.segments
+                 if (r := segment_reach(s)) is not None), default=0)
+    if not exe.program.convergent:
+        assert plan.n_chunks * plan.fuse_k >= reach, expr
+
+    # the real index maps stay in bounds over the whole grid
+    assert A.check_plan_index_maps(plan) == [], expr

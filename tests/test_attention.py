@@ -59,7 +59,8 @@ def test_flash_gradients(sq, sk, h, kv, hd, causal, window, qc):
 
     f = lambda q, k, v: jnp.sum(jnp.sin(flash_attention(      # noqa: E731
         q, k, v, causal=causal, window=window, q_chunk=qc, kv_chunk=qc)))
-    r = lambda q, k, v: jnp.sum(jnp.sin(ref_attn(q, k, v, causal, window)))  # noqa: E731
+    r = lambda q, k, v: jnp.sum(  # noqa: E731
+        jnp.sin(ref_attn(q, k, v, causal, window)))
     g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
     g2 = jax.grad(r, argnums=(0, 1, 2))(q, k, v)
     for a, b in zip(g1, g2):

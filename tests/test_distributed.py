@@ -3,7 +3,6 @@
 Multi-device equivalence runs in a subprocess with 8 fake devices
 (XLA_FLAGS must be set before jax initializes; the main test process
 keeps its single-device view per the dry-run contract)."""
-import json
 import os
 import subprocess
 import sys

@@ -81,7 +81,8 @@ def test_asf_bounded_and_ordered(male):
     a2 = OPS.asf(f, 2)
     assert a1.shape == f.shape and a1.dtype == f.dtype
     # ASF smooths: total variation decreases with scale
-    tv = lambda x: np.abs(np.diff(np.asarray(x, np.int32), axis=0)).sum()  # noqa: E731
+    tv = lambda x: np.abs(  # noqa: E731
+        np.diff(np.asarray(x, np.int32), axis=0)).sum()
     assert tv(a2) <= tv(a1) <= tv(f)
 
 

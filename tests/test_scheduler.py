@@ -145,7 +145,8 @@ def test_plan_override_consistent(rng):
                       fuse_k=8, band_h=32, convergent=True)
     out_c = ops.morph_chain(f, 8, "erode", "pallas", plan=plan)
     np.testing.assert_array_equal(
-        np.asarray(out_c), np.asarray(ops.morph_chain(f, 8, "erode", "pallas")))
+        np.asarray(out_c),
+        np.asarray(ops.morph_chain(f, 8, "erode", "pallas")))
     out_g = ops.geodesic_chain(marker, m, 8, "erode", "pallas", plan=plan)
     np.testing.assert_array_equal(
         np.asarray(out_g),
