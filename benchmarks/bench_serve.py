@@ -1,18 +1,23 @@
 """Serving throughput: single-request latency vs micro-batched
 throughput across bucket sizes, through the full ``repro.serve`` stack
-(bucketing, compiled-plan cache, double-buffered executor).
+(bucketing, compiled-plan cache, double-buffered executor) — plus an
+**overload** section driving an open-loop arrival burst into a bounded
+queue so the robustness counters (shed rate, retries, expiries) land in
+the same ``run.py --json`` schema as the throughput rows.
 
-Rows come straight from :meth:`ServeMetrics.bench_rows`, so the derived
-column carries the serving-native metrics (latency percentiles, batch
-occupancy, cache hit-rate, FPS / MPx-per-s) and ``run.py --json``
-captures serving throughput alongside the kernel benchmarks.
+Rows come straight from :meth:`ServeMetrics.bench_rows` /
+:meth:`ServeMetrics.counter_rows`, so the derived column carries the
+serving-native metrics (latency percentiles, batch occupancy, cache
+hit-rate, FPS / MPx-per-s) and the lifecycle counters documented in
+``docs/ROBUSTNESS.md``.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.data.images import blobs
-from repro.serve import Service
+from repro.serve import QueueFullError, ServeError, Service
+from repro.serve import faults as F
 
 #: Ops benched per bucket size: one convergence-driven reconstruction,
 #: one fixed chain.
@@ -31,7 +36,7 @@ def _stream(service: Service, frames, n_round: int):
         t.result()
 
 
-def run(quick: bool = True):
+def _throughput(quick: bool) -> list[dict]:
     size = 128 if quick else 512
     backend = "xla" if quick else "pallas"
     batches = (1, 4) if quick else (1, 4, 8)
@@ -50,9 +55,73 @@ def run(quick: bool = True):
         )
         _stream(service, frames, rounds)
         for r in service.bench_rows():
+            if "/counters/" in r["name"]:
+                continue  # lifecycle counters: overload section only
             r["name"] = r["name"].replace("serve/", f"serve/b{max_batch}/")
             rows.append(r)
     return rows
+
+
+def _overload(quick: bool) -> list[dict]:
+    """Open-loop arrival burst against a bounded queue.
+
+    Arrivals are independent of completions (no waiting on results mid
+    burst), request shapes are spread across several buckets so no
+    bucket fills to ``max_batch`` on its own, the queue is bounded, a
+    per-request deadline is set, and one transient dispatch fault is
+    injected — the service load-sheds what it must and completes the
+    rest, and the counters (shed/expired/retried) plus the admitted
+    requests' p99 become rows.
+    """
+    size = 64 if quick else 192
+    n_burst = 32 if quick else 128
+    n_shapes = 4
+    # max_delay_ms is effectively infinite: during the burst nothing
+    # drains, so admission control (max_queue) is what absorbs the
+    # overload — the arrival rate is decoupled from completions.
+    svc = Service(
+        backend="xla", max_batch=8, max_delay_ms=1e6, pad_quantum=16,
+        max_queue=16, default_deadline_ms=30e3,
+        faults=F.parse("seed=1702;dispatch:n=1"),
+    )
+    frames = [blobs(size + 16 * j, size, np.uint8, seed=j)
+              for j in range(n_shapes)]
+    tickets = []
+    shed = 0
+    for i in range(n_burst):
+        try:
+            tickets.append(svc.submit("hmax", frames[i % n_shapes],
+                                      params={"h": 40}))
+        except QueueFullError:
+            shed += 1
+    svc.flush()
+    completed = 0
+    for t in tickets:
+        try:
+            t.result()
+            completed += 1
+        except ServeError:
+            pass  # typed shed/expiry under overload: expected
+    stats = svc.stats()
+    counters = stats["counters"]
+    p99 = stats["totals"]["latency"]["p99_ms"]
+    rows = [{
+        "name": "serve/overload/burst",
+        "us_per_call": p99 * 1e3,
+        "derived": (
+            f"p99={p99:.1f}ms shed_rate={shed / n_burst:.2f} "
+            f"retried={counters['retried']} expired={counters['expired']} "
+            f"admitted={len(tickets)} completed={completed}"
+        ),
+    }]
+    for r in svc.metrics.counter_rows():
+        r["name"] = r["name"].replace("serve/", "serve/overload/")
+        rows.append(r)
+    return rows
+
+
+def run(quick: bool = True):
+    return _throughput(quick) + _overload(quick)
 
 
 if __name__ == "__main__":

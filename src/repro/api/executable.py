@@ -111,12 +111,28 @@ class Executable:
         outputs (always a tuple) — the serve bucket entry point."""
         return self._run_fn(*canonical)
 
+    def run_batch_stats(self, *canonical):
+        """Run phase plus the convergence watchdog's verdict:
+        ``(outputs, converged)`` where ``converged`` is a (N,) bool
+        vector, False for images whose convergence-driven segments
+        exhausted the chunk budget (``ReconstructStats.converged``
+        per image, AND-ed across segments).  The serve executor demuxes
+        it into per-request degraded flags; programs without convergent
+        segments (and the jnp oracle engine, which iterates to its own
+        fixpoint) report all-True."""
+        return self._run_stats_fn(*canonical)
+
     def stats(self) -> dict:
         """Static accounting of the compiled program (pads, launches,
         refills): what the fusion tests and the pipeline benchmarks
         count.  ``pads``/``crops`` are the pad/crop round-trips of one
         execution; the legacy per-stage path pays one of each per
-        elementary operator stage."""
+        elementary operator stage.  ``convergent``/``chunk_budget_rec``
+        /``chunk_budget_qdt`` describe the watchdog configuration the
+        convergence-driven segments run under; the *runtime* verdict
+        for a particular execution comes from :meth:`run_batch_stats`
+        (or ``ReconstructStats.converged`` on the engine entry
+        points)."""
         prog = self.program
         return {
             "backend": self.backend,
@@ -126,6 +142,11 @@ class Executable:
             "refills": sum(1 for s in prog.segments if s.kind == "refill"),
             "fused_chain_len": prog.fused_chain_len,
             "plan_key": self.plan.key if self.plan is not None else None,
+            "convergent": prog.convergent,
+            "chunk_budget_rec": (self._max_chunks_rec
+                                 if self.plan is not None else None),
+            "chunk_budget_qdt": (self._max_chunks_qdt
+                                 if self.plan is not None else None),
         }
 
     def __repr__(self):
@@ -160,6 +181,10 @@ class Executable:
     def _run_fn(self):
         return jax.jit(self._run_segments)
 
+    @functools.cached_property
+    def _run_stats_fn(self):
+        return jax.jit(self._run_segments_stats)
+
     def _pipeline(self, *inputs3):
         prog = self.program
         env = dict(zip(prog.input_names, inputs3))
@@ -177,6 +202,18 @@ class Executable:
         if self.plan is None:
             return self._run_xla(canonical)
         return self._run_padded(canonical)
+
+    def _run_segments_stats(self, *canonical):
+        """Run phase + (N,) convergence vector (see run_batch_stats)."""
+        all_ok = jnp.ones((self.n_images,), jnp.bool_)
+        if self.plan is None:
+            # the jnp oracle bodies iterate to their own fixpoint
+            return self._run_xla(canonical), all_ok
+        conv: list = []
+        outs = self._run_padded(canonical, conv)
+        for vec in conv:
+            all_ok = jnp.logical_and(all_ok, vec)
+        return outs, all_ok
 
     # -- xla engine: the jnp oracle bodies, unpadded -----------------------
 
@@ -221,7 +258,7 @@ class Executable:
         cols = jnp.arange(plan.width_pad) < self.width
         return rows[:, None] & cols[None, :]
 
-    def _run_padded(self, canonical):
+    def _run_padded(self, canonical, conv: list | None = None):
         from repro.kernels.ops import _pad, _stacked
 
         plan = self.plan
@@ -231,10 +268,10 @@ class Executable:
             x3 = x[None] if x.ndim == 2 else x
             vals[slot] = _stacked(_pad(x3, plan, _fill_value(fill, x.dtype)))
         for seg in self.program.segments:
-            self._pallas_seg(seg, vals)
+            self._pallas_seg(seg, vals, conv)
         return tuple(self._crop2(vals[s]) for s in self.program.run_outputs)
 
-    def _pallas_seg(self, seg, vals):
+    def _pallas_seg(self, seg, vals, conv: list | None = None):
         from repro.kernels.ops import _scheduled_qdt, _scheduled_reconstruct
 
         plan = self.plan
@@ -252,15 +289,19 @@ class Executable:
                 vals[seg.srcs[0]], vals[seg.srcs[1]],
                 seg.param("op"), seg.param("n"))
         elif seg.kind == "reconstruct":
-            out, _, _, _ = _scheduled_reconstruct(
+            out, _, _, _, img_conv = _scheduled_reconstruct(
                 vals[seg.srcs[0]], vals[seg.srcs[1]], plan,
                 seg.param("op"), self._max_chunks_rec, False,
             )
             vals[seg.dsts[0]] = out
+            if conv is not None:
+                conv.append(img_conv)
         elif seg.kind == "qdt":
-            _, r, d = _scheduled_qdt(vals[seg.srcs[0]], plan,
-                                     self._max_chunks_qdt)
+            _, r, d, img_conv = _scheduled_qdt(vals[seg.srcs[0]], plan,
+                                               self._max_chunks_qdt)
             vals[seg.dsts[0]], vals[seg.dsts[1]] = d, r
+            if conv is not None:
+                conv.append(img_conv)
         else:  # pragma: no cover
             raise AssertionError(seg.kind)
 

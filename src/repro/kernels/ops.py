@@ -104,12 +104,19 @@ class ReconstructStats(NamedTuple):
     field names say "band" because row-only cells are bands; for tiled
     plans ``total_bands`` reports ``plan.total_tiles`` so the
     ``active_band_sum / (total_bands · chunks)`` active-fraction recipe
-    keeps working unchanged."""
+    keeps working unchanged.
+
+    ``converged`` is the scheduler watchdog's verdict: True iff every
+    image's active set emptied before the chunk budget (``max_chunks``)
+    ran out.  A False value means the result is a *partial* fixpoint —
+    the degraded-mode contract (``docs/ROBUSTNESS.md``) says how the
+    serving layer surfaces it (``Ticket.degraded``)."""
 
     chunks: jnp.ndarray           # int32: K-chunk iterations executed
     active_band_sum: jnp.ndarray  # int32: Σ scheduled cells over all chunks
     total_bands: jnp.ndarray      # int32: cells in the padded stack
     active_per_chunk: jnp.ndarray  # int32[max_chunks], 0 past ``chunks``
+    converged: jnp.ndarray = True  # bool: active set emptied within budget
 
 
 # ---------------------------------------------------------------------------
@@ -452,11 +459,18 @@ def _drive_scheduler(
         chunks, so a localized wavefront iterating inside the same
         cells does not re-gather the mask every chunk.
 
-    Returns (data, chunks, active_cell_sum, active_per_chunk).  The
-    per-chunk trace is only carried through the loop when
-    ``with_stats`` — it is a max_chunks-sized array updated by scatter
-    every chunk, which the plain paths must not pay for (XLA cannot
-    DCE loop-carried state).
+    Returns (data, chunks, active_cell_sum, active_per_chunk,
+    img_converged).  ``img_converged`` is the convergence watchdog's
+    per-image verdict — a (n_images,) bool vector, True where the
+    image's cells all went inactive *within the chunk budget*.  The
+    loop already refuses to spin (``it < max_chunks`` in the cond);
+    the vector is what turns a budget exhaustion from a silent partial
+    result into a typed, per-image signal that
+    ``reconstruct_with_stats`` (``ReconstructStats.converged``) and the
+    serving layer's degraded-mode demux surface.  The per-chunk trace
+    is only carried through the loop when ``with_stats`` — it is a
+    max_chunks-sized array updated by scatter every chunk, which the
+    plain paths must not pay for (XLA cannot DCE loop-carried state).
     """
     total = plan.total_tiles
     cap = plan.compact_capacity
@@ -531,9 +545,10 @@ def _drive_scheduler(
         key0,
         val0,
     )
-    data, _, it, _, asum, per_chunk, _, _ = jax.lax.while_loop(
+    data, active, it, _, asum, per_chunk, _, _ = jax.lax.while_loop(
         cond, body, init)
-    return data, it, asum, per_chunk
+    img_converged = jnp.logical_not(img_active(active))
+    return data, it, asum, per_chunk, img_converged
 
 
 def _scheduled_reconstruct(fp, mp, plan: ChainPlan, op: str, max_chunks: int,
@@ -602,7 +617,7 @@ def _reconstruct_impl(f, m, op, backend, max_chunks, plan, with_stats=False):
     fp = _stacked(_pad(f3, plan, ident))
     mp = _stacked(_pad(m3, plan, ident))
 
-    out, chunks, asum, per_chunk = _scheduled_reconstruct(
+    out, chunks, asum, per_chunk, img_conv = _scheduled_reconstruct(
         fp, mp, plan, op, max_chunks, with_stats
     )
     stats = ReconstructStats(
@@ -610,6 +625,7 @@ def _reconstruct_impl(f, m, op, backend, max_chunks, plan, with_stats=False):
         active_band_sum=asum,
         total_bands=jnp.asarray(plan.total_tiles, jnp.int32),
         active_per_chunk=per_chunk,
+        converged=jnp.all(img_conv),
     )
     return _crop(_unstacked(out, f3.shape[0]), f.shape, was_2d), stats
 
@@ -660,14 +676,19 @@ def reconstruct_with_stats(
     ``backend``/``max_chunks``/``plan`` remain first-class here."""
     backend = canonicalize_backend(backend)
     if backend == "xla":
+        iter_cap = (max_chunks if max_chunks is not None
+                    else f.shape[-1] * f.shape[-2])
         out, iters = (
-            M.erode_reconstruct_with_iters(f, m) if op == "erode"
-            else M.dilate_reconstruct_with_iters(f, m)
+            M.erode_reconstruct_with_iters(f, m, iter_cap) if op == "erode"
+            else M.dilate_reconstruct_with_iters(f, m, iter_cap)
         )
         one = jnp.asarray(1, jnp.int32)
         return out, ReconstructStats(
             chunks=iters, active_band_sum=iters, total_bands=one,
             active_per_chunk=jnp.zeros((0,), jnp.int32),
+            # the oracle loop exits early iff a fixpoint was reached;
+            # hitting the cap exactly leaves convergence unproven
+            converged=iters < jnp.asarray(iter_cap, jnp.int32),
         )
     return _reconstruct_impl(f, m, op, backend, max_chunks, plan,
                              with_stats=True)
@@ -683,8 +704,9 @@ def _scheduled_qdt(fp, plan: ChainPlan, max_chunks: int):
 
     ``fp`` is the stacked (TOTAL_H, W_pad) image, padded with the
     erosion identity.  Returns the final (eroded, residual, distance)
-    stacked planes; the residual accumulator dtype follows the paper's
-    convention (float32 for float images, int32 otherwise).
+    stacked planes plus the watchdog's per-image convergence vector;
+    the residual accumulator dtype follows the paper's convention
+    (float32 for float images, int32 otherwise).
     """
     k = plan.fuse_k
     acc = qdt_acc_dtype(fp.dtype)
@@ -729,11 +751,11 @@ def _scheduled_qdt(fp, plan: ChainPlan, max_chunks: int):
         d = _scatter_mid(d, idx, d2, plan)
         return (x, r, d), _scatter_flags(ch, idx, plan)
 
-    (x, r, d), _, _, _ = _drive_scheduler(
+    (x, r, d), _, _, _, img_conv = _drive_scheduler(
         plan, (fp, rp, dp), full_step=full_step, compact_step=compact_step,
         max_chunks=max_chunks,
     )
-    return x, r, d
+    return x, r, d, img_conv
 
 
 def qdt_planes(

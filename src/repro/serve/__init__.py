@@ -57,11 +57,33 @@ scheduler lifecycle and the ChainPlan contract it schedules against are
 documented in ``docs/ARCHITECTURE.md``), so a converged image in a
 served stack stops costing tile work while its batch-mates iterate —
 the serving-level payoff of the paper's Alg. 4 requeue mechanism.
+
+Fault-tolerant lifecycle (PR 7, full contract in ``docs/ROBUSTNESS.md``)
+------------------------------------------------------------------------
+
+``errors``
+    the typed error taxonomy: admission rejections
+    (:class:`RequestRejected` and subclasses, :class:`QueueFullError`)
+    raised synchronously from ``submit``; execution outcomes
+    (:class:`DeadlineExceededError`, :class:`ExecutorError`,
+    :class:`PoisonedRequestError`) recorded on tickets — no
+    unstructured exception escapes ``Service.poll()``.
+``faults``
+    the deterministic fault-injection harness (:class:`FaultInjector`,
+    seeded via ``REPRO_FAULTS``) driving the chaos suite and the CI
+    ``chaos`` job through the named sites
+    dispatch/drain/poison/deadline/budget.
 """
-from repro.serve import registry
+from repro.serve import errors, faults, registry
 from repro.serve.bucketer import BucketKey, Ticket, bucket_hw, canonical_batch
 from repro.serve.cache import CacheEntry, CompiledProgramCache
+from repro.serve.errors import (DeadlineExceededError, ExecutorError,
+                                InvalidRequestError, NonFiniteInputError,
+                                PoisonedRequestError, QueueFullError,
+                                RequestRejected, ServeError,
+                                UnsupportedDtypeError)
 from repro.serve.executor import Executor
+from repro.serve.faults import FaultInjector, FaultSpec, InjectedFault
 from repro.serve.metrics import ServeMetrics
 from repro.serve.service import Service, serve_stream
 
@@ -69,12 +91,26 @@ __all__ = [
     "BucketKey",
     "CacheEntry",
     "CompiledProgramCache",
+    "DeadlineExceededError",
     "Executor",
+    "ExecutorError",
+    "FaultInjector",
+    "FaultSpec",
+    "InjectedFault",
+    "InvalidRequestError",
+    "NonFiniteInputError",
+    "PoisonedRequestError",
+    "QueueFullError",
+    "RequestRejected",
+    "ServeError",
     "ServeMetrics",
     "Service",
     "Ticket",
+    "UnsupportedDtypeError",
     "bucket_hw",
     "canonical_batch",
+    "errors",
+    "faults",
     "registry",
     "serve_stream",
 ]

@@ -31,6 +31,7 @@ from typing import Any, NamedTuple
 import numpy as np
 
 from repro.core import morphology as M
+from repro.serve.errors import (NonFiniteInputError, UnsupportedDtypeError)
 
 
 def pad_fill(dtype, which: str):
@@ -38,6 +39,32 @@ def pad_fill(dtype, which: str):
     (the lattice top/bottom already defined by ``core.morphology``)."""
     top = which == "hi"
     return np.asarray(M.lattice_top(dtype) if top else M.lattice_bottom(dtype))
+
+
+def check_payload(op: str, images) -> None:
+    """Admission gate between user payloads and the absorbing pad fills.
+
+    The bucket staging pads every request with lattice identities —
+    which for floating dtypes are **±Inf**.  A payload that itself
+    contains NaN/±Inf is therefore indistinguishable from padding once
+    staged: the kernels would absorb it silently and the demuxed result
+    would be garbage while still *looking* bit-exact.  Instead of
+    coercing, admission rejects such payloads with a typed error; dtypes
+    outside the lattice (no min/max identity) are rejected likewise.
+    """
+    for im in images:
+        kind = np.dtype(im.dtype).kind
+        if kind not in "uif":
+            raise UnsupportedDtypeError(
+                f"op {op!r}: dtype {im.dtype} has no lattice identity "
+                "(integer and floating dtypes only)"
+            )
+        if kind == "f" and not np.isfinite(im).all():
+            raise NonFiniteInputError(
+                f"op {op!r}: input contains NaN/Inf, which collides with "
+                "the absorbing pad fills (float lattice identities are "
+                "±Inf) — sanitize the payload before submitting"
+            )
 
 
 def bucket_hw(h: int, w: int, quantum: int) -> tuple[int, int]:
@@ -73,7 +100,17 @@ class BucketKey(NamedTuple):
 
 @dataclasses.dataclass
 class Ticket:
-    """Per-request handle, fulfilled by the executor's demux."""
+    """Per-request handle, fulfilled by the executor's demux.
+
+    Typed outcome surface: exactly one of ``value``/``error`` is set
+    once ``done``; ``error`` is always a
+    :class:`~repro.serve.errors.ServeError` subclass (the lifecycle
+    guarantees no unstructured exception reaches a ticket).
+    ``degraded`` marks a *successful* result whose convergence watchdog
+    tripped — the value is a partial fixpoint (see the degraded-mode
+    contract in ``docs/ROBUSTNESS.md``).  ``deadline`` is the absolute
+    monotonic time after which the request is shed instead of served.
+    """
 
     request_id: int
     op: str
@@ -81,6 +118,8 @@ class Ticket:
     done: bool = False
     value: Any = None
     error: Exception | None = None
+    degraded: bool = False
+    deadline: float | None = None
     t_done: float = 0.0
     _service: Any = dataclasses.field(default=None, repr=False)
     _bucket_key: Any = dataclasses.field(default=None, repr=False)
@@ -99,6 +138,16 @@ class Ticket:
             )
         return self.value
 
+    @property
+    def outcome(self) -> str:
+        """Stable slug for the request's lifecycle outcome: ``pending``,
+        ``ok``, ``degraded``, or the typed error's ``code``."""
+        if not self.done:
+            return "pending"
+        if self.error is not None:
+            return getattr(self.error, "code", "error")
+        return "degraded" if self.degraded else "ok"
+
 
 @dataclasses.dataclass
 class PendingRequest:
@@ -115,6 +164,7 @@ class PendingRequest:
     shape: tuple[int, int]  # original (H, W) for the demux crop
     info: Any = None        # registry.RunInfo (staging/bucket identity)
     finalize: Any = None    # (outputs, images) -> outputs, or None
+    poisoned: bool = False  # fault harness: this request kills its batch
 
 
 class BucketQueue:

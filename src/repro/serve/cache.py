@@ -25,6 +25,15 @@ class CacheEntry(NamedTuple):
     fn: Any              # the jitted batched program
     plan: Any            # ChainPlan the program embeds (None for pure-XLA ops)
     key: tuple
+    #: stats-returning variant ``(inputs) -> (outputs, (N,) converged)``
+    #: (``Executable.run_batch_stats``); None for custom OpSpecs, whose
+    #: hand-written run exposes no convergence watchdog.
+    stats_fn: Any = None
+
+    def primary(self):
+        """The callable the executor dispatches (and warmup executes):
+        the stats variant when the program has one, else ``fn``."""
+        return self.stats_fn if self.stats_fn is not None else self.fn
 
 
 class CompiledProgramCache:

@@ -1,5 +1,5 @@
 """Async double-buffered executor: overlap host staging with device
-compute, demux per-request results.
+compute, demux per-request results — and keep serving through failures.
 
 JAX dispatch is asynchronous — calling a compiled program enqueues the
 device work and returns device buffers immediately — so the pipeline
@@ -14,6 +14,30 @@ its original (H, W) (dropping the pad-to-bucket canonicalization), the
 from different ops under cross-op packing — e.g. DOME's ``f - hmax``
 residual next to plain HMAX requests), the ticket is fulfilled, and
 sentinel slots (batch padding up to the canonical size) are discarded.
+Slots whose convergence watchdog tripped (the per-image vector from
+``Executable.run_batch_stats``) are delivered with
+``Ticket.degraded = True`` — partial convergence is a degraded result,
+not an error.
+
+Fault tolerance (the recovery ladder, ``docs/ROBUSTNESS.md``):
+
+1. **retry with backoff** — a failed batch (trace, dispatch, or the
+   asynchronous error surfacing at ``block_until_ready``) is re-run
+   synchronously up to ``max_retries`` times via the service-provided
+   ``runner`` closure; transient errors clear here and only cost a
+   ``retried`` counter bump.
+2. **bisect quarantine** — a batch that keeps failing is split in
+   halves and each half re-run recursively, so a single poisoned
+   request converges to a singleton that fails alone: *it* gets a typed
+   :class:`~repro.serve.errors.PoisonedRequestError` while every
+   healthy co-batched request completes bit-exactly (sub-batch
+   execution is bit-exact by the bucketer's absorbing-pad/sentinel
+   invariance).
+
+No exception escapes the executor's public surface: every failure ends
+as a typed error on the affected tickets.  Injected faults
+(``serve/faults.py`` sites ``dispatch``/``drain``) enter exactly where
+the real failures would.
 
 Where this sits in the pipeline (registry → bucketer → cache →
 executor) is mapped in ``docs/ARCHITECTURE.md``.
@@ -22,64 +46,80 @@ from __future__ import annotations
 
 import collections
 import time
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.serve import faults as F
 from repro.serve.bucketer import BucketKey, PendingRequest
+from repro.serve.errors import ExecutorError, PoisonedRequestError
 from repro.serve.metrics import ServeMetrics
 
 
 class InflightBatch(NamedTuple):
     outputs: tuple           # device buffers, one per run output
+    converged: Any           # (n_slots,) bool device buffer, or None
     requests: list           # real PendingRequests (sentinel slots excluded)
     key: BucketKey
     n_slots: int
     t_dispatch: float
+    runner: Any              # sync re-execution closure (recovery ladder)
 
 
 class Executor:
     def __init__(self, metrics: ServeMetrics, depth: int = 2,
-                 clock=time.monotonic):
+                 clock=time.monotonic, faults: F.FaultInjector = F.NULL,
+                 max_retries: int = 2, backoff_s: float = 0.0,
+                 sleep=time.sleep):
         if depth < 1:
             raise ValueError("pipeline depth must be >= 1")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
         self.depth = depth
         self.metrics = metrics
         self.clock = clock
+        self.faults = faults
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.sleep = sleep
         self._inflight: collections.deque[InflightBatch] = collections.deque()
 
     @property
     def inflight(self) -> int:
         return len(self._inflight)
 
+    # -- dispatch ----------------------------------------------------------
+
     def dispatch(self, entry, key: BucketKey,
                  requests: list[PendingRequest], n_slots: int,
-                 stacked_inputs: tuple) -> None:
+                 stacked_inputs: tuple, runner=None) -> None:
         """Launch one batch (async) and retire the oldest if the
-        pipeline is full."""
+        pipeline is full.  Never raises: a trace/compile failure at the
+        call enters the recovery ladder instead."""
         try:
-            out = entry.fn(*stacked_inputs)
+            outputs, conv = self._call_entry(entry, stacked_inputs)
         except Exception as exc:
-            # trace/compile failure: the requests are already out of the
-            # queue, so resolve their tickets with the error instead of
-            # stranding them, then surface it to the caller.
-            self._fail_batch(requests, exc)
-            raise
-        outputs = out if isinstance(out, tuple) else (out,)
+            self.recover(key, requests, runner, exc)
+            return
         self._inflight.append(InflightBatch(
-            outputs=outputs, requests=requests, key=key,
-            n_slots=n_slots, t_dispatch=self.clock(),
+            outputs=outputs, converged=conv, requests=requests, key=key,
+            n_slots=n_slots, t_dispatch=self.clock(), runner=runner,
         ))
         while len(self._inflight) > self.depth:
             self.drain_one()
 
-    def _fail_batch(self, requests, exc: Exception) -> None:
-        now = self.clock()
-        for req in requests:
-            req.ticket.error = exc
-            req.ticket.done = True
-            req.ticket.t_done = now
+    @staticmethod
+    def _call_entry(entry, stacked_inputs):
+        """Run a cache entry's primary callable → (outputs, conv|None)."""
+        if entry.stats_fn is not None:
+            outputs, conv = entry.stats_fn(*stacked_inputs)
+            return outputs, conv
+        out = entry.fn(*stacked_inputs)
+        return (out if isinstance(out, tuple) else (out,)), None
+
+    # -- drain + demux -----------------------------------------------------
 
     def drain_one(self) -> bool:
         """Block on the oldest in-flight batch and demux it."""
@@ -87,31 +127,32 @@ class Executor:
             return False
         batch = self._inflight.popleft()
         try:
-            jax.block_until_ready(batch.outputs)
+            self.faults.check("drain", batch.key.label())
+            jax.block_until_ready((batch.outputs, batch.converged))
         except Exception as exc:  # async execution error surfaces here
-            self._fail_batch(batch.requests, exc)
-            now = self.clock()
-            self.metrics.record_batch(
-                batch.key.label(),
-                n_real=len(batch.requests),
-                n_slots=batch.n_slots,
-                pixels=sum(h * w for h, w in
-                           (r.shape for r in batch.requests)),
-                t_dispatch=batch.t_dispatch,
-                t_done=now,
-                latencies_s=[now - r.ticket.t_enqueue
-                             for r in batch.requests],
-                n_errors=len(batch.requests),
-            )
+            self.recover(batch.key, batch.requests, batch.runner, exc)
             return True
-        now = self.clock()
+        self._demux(batch.key, batch.requests, batch.n_slots,
+                    batch.outputs, batch.converged, batch.t_dispatch)
+        return True
 
+    def drain_all(self) -> None:
+        while self.drain_one():
+            pass
+
+    def _demux(self, key: BucketKey, requests, n_slots: int, outputs,
+               converged, t_dispatch: float) -> None:
+        """Crop, finalize and deliver per-request results (shared by the
+        async drain path and the synchronous recovery re-runs)."""
+        now = self.clock()
+        conv = None if converged is None else np.asarray(converged)
         latencies = []
         pixels = 0
         n_errors = 0
-        for slot, req in enumerate(batch.requests):
+        n_degraded = 0
+        for slot, req in enumerate(requests):
             h, w = req.shape
-            cropped = tuple(o[slot, :h, :w] for o in batch.outputs)
+            cropped = tuple(o[slot, :h, :w] for o in outputs)
             try:
                 if req.finalize is not None:
                     cropped = tuple(req.finalize(
@@ -121,8 +162,14 @@ class Executor:
                 req.ticket.value = (
                     cropped[0] if req.info.n_outputs == 1 else cropped
                 )
+                if conv is not None and not conv[slot]:
+                    req.ticket.degraded = True
+                    n_degraded += 1
+                    self.metrics.count("degraded")
             except Exception as exc:  # surface per-request, keep serving
-                req.ticket.error = exc
+                req.ticket.error = ExecutorError(
+                    f"finalize failed for request {req.ticket.request_id} "
+                    f"({req.ticket.op})", cause=exc)
                 n_errors += 1
             req.ticket.done = True
             req.ticket.t_done = now
@@ -130,17 +177,77 @@ class Executor:
             pixels += h * w
 
         self.metrics.record_batch(
-            batch.key.label(),
-            n_real=len(batch.requests),
-            n_slots=batch.n_slots,
+            key.label(),
+            n_real=len(requests),
+            n_slots=n_slots,
             pixels=pixels,
-            t_dispatch=batch.t_dispatch,
+            t_dispatch=t_dispatch,
             t_done=now,
             latencies_s=latencies,
             n_errors=n_errors,
+            n_degraded=n_degraded,
         )
-        return True
+        return
 
-    def drain_all(self) -> None:
-        while self.drain_one():
-            pass
+    # -- recovery ladder: retry with backoff, then bisect quarantine -------
+
+    def recover(self, key: BucketKey, requests, runner,
+                exc: Exception) -> None:
+        """A batch failed: retry whole, then bisect-quarantine.
+
+        Every request ends with a typed outcome — value, degraded
+        value, or :class:`PoisonedRequestError`/:class:`ExecutorError`
+        — and nothing is raised to the caller.
+        """
+        self.metrics.count("batch_failures")
+        if runner is None:
+            # no re-execution path (direct executor use): typed failure
+            self._fail_batch(requests, ExecutorError(
+                f"batch {key.label()} failed with no runner to retry",
+                cause=exc))
+            return
+        for attempt in range(self.max_retries):
+            if self.backoff_s > 0.0:
+                self.sleep(self.backoff_s * (2 ** attempt))
+            self.metrics.count("retried")
+            try:
+                outputs, n_slots, conv = runner(requests)
+            except Exception as exc2:
+                exc = exc2
+                continue
+            self._demux(key, requests, n_slots, outputs, conv,
+                        t_dispatch=self.clock())
+            return
+        self._quarantine(key, requests, runner, exc)
+
+    def _quarantine(self, key: BucketKey, requests, runner,
+                    cause: Exception) -> None:
+        """Bisect-retry: isolate poisoned request(s) so healthy
+        co-batched requests still complete bit-exactly."""
+        if len(requests) == 1:
+            req = requests[0]
+            req.ticket.error = PoisonedRequestError(
+                f"request {req.ticket.request_id} ({req.ticket.op}) "
+                "poisoned its batch: every containing subset failed",
+                cause=cause)
+            req.ticket.done = True
+            req.ticket.t_done = self.clock()
+            self.metrics.count("poisoned")
+            return
+        mid = len(requests) // 2
+        for part in (requests[:mid], requests[mid:]):
+            try:
+                outputs, n_slots, conv = runner(part)
+            except Exception as exc:
+                self._quarantine(key, part, runner, exc)
+            else:
+                self.metrics.count("quarantine_reruns")
+                self._demux(key, part, n_slots, outputs, conv,
+                            t_dispatch=self.clock())
+
+    def _fail_batch(self, requests, exc: Exception) -> None:
+        now = self.clock()
+        for req in requests:
+            req.ticket.error = exc
+            req.ticket.done = True
+            req.ticket.t_done = now

@@ -25,6 +25,24 @@ import numpy as np
 #: Most recent per-bucket request latencies retained for percentiles.
 LATENCY_WINDOW = 4096
 
+#: Lifecycle counters always present in ``summary()["counters"]`` (and
+#: as ``serve/counters/*`` rows), so the benchmarks JSON schema is
+#: stable whether or not faults occurred.  Semantics (full contract in
+#: ``docs/ROBUSTNESS.md``):
+#:   rejected    admission-time typed rejections (invalid/non-finite/
+#:               unsupported dtype/unknown op)
+#:   shed        requests load-shed because the bounded queue was full
+#:   expired     requests whose deadline passed while queued (shed at
+#:               launch with DeadlineExceededError)
+#:   retried     whole-batch retry attempts after an executor failure
+#:   poisoned    requests isolated by bisect-retry quarantine
+#:   degraded    requests whose convergence watchdog tripped (partial
+#:               result returned, Ticket.degraded = True)
+#:   batch_failures    batches whose first execution failed
+#:   quarantine_reruns successful sub-batch re-executions during bisect
+COUNTERS = ("rejected", "shed", "expired", "retried", "poisoned",
+            "degraded", "batch_failures", "quarantine_reruns")
+
 
 @dataclasses.dataclass
 class _BucketStats:
@@ -33,6 +51,7 @@ class _BucketStats:
     slots: int = 0
     pixels: int = 0
     errors: int = 0
+    degraded: int = 0
     t_first: float | None = None   # earliest dispatch seen
     t_last: float = 0.0            # latest drain seen
     latencies_s: collections.deque = dataclasses.field(
@@ -53,6 +72,11 @@ class _BucketStats:
 class ServeMetrics:
     def __init__(self):
         self._buckets: dict[str, _BucketStats] = {}
+        self.counters = collections.Counter()
+
+    def count(self, name: str, n: int = 1) -> None:
+        """Bump one lifecycle counter (see :data:`COUNTERS`)."""
+        self.counters[name] += n
 
     def record_batch(
         self,
@@ -65,6 +89,7 @@ class ServeMetrics:
         t_done: float,
         latencies_s,
         n_errors: int = 0,
+        n_degraded: int = 0,
     ) -> None:
         b = self._buckets.setdefault(label, _BucketStats())
         b.requests += n_real
@@ -72,6 +97,7 @@ class ServeMetrics:
         b.slots += n_slots
         b.pixels += pixels
         b.errors += n_errors
+        b.degraded += n_degraded
         b.t_first = t_dispatch if b.t_first is None else min(b.t_first,
                                                              t_dispatch)
         b.t_last = max(b.t_last, t_done)
@@ -107,6 +133,7 @@ class ServeMetrics:
                 "requests": b.requests,
                 "batches": b.batches,
                 "errors": b.errors,
+                "degraded": b.degraded,
                 "batch_occupancy": b.occupancy,
                 "latency": self._percentiles(b.latencies_s),
                 "fps": fps,
@@ -117,6 +144,7 @@ class ServeMetrics:
             tot.slots += b.slots
             tot.pixels += b.pixels
             tot.errors += b.errors
+            tot.degraded += b.degraded
             if b.t_first is not None:
                 tot.t_first = (b.t_first if tot.t_first is None
                                else min(tot.t_first, b.t_first))
@@ -129,15 +157,39 @@ class ServeMetrics:
                 "requests": tot.requests,
                 "batches": tot.batches,
                 "errors": tot.errors,
+                "degraded": tot.degraded,
                 "batch_occupancy": tot.occupancy,
                 "latency": self._percentiles(all_lat),
                 "fps": fps,
                 "mpx_per_s": mpx,
             },
+            "counters": self.counter_summary(),
         }
         if cache_stats is not None:
             out["cache"] = cache_stats
         return out
+
+    def counter_summary(self) -> dict:
+        """Every canonical counter (zeros included, so the schema is
+        stable) plus any ad-hoc ones that were bumped."""
+        out = {name: int(self.counters.get(name, 0)) for name in COUNTERS}
+        for name in sorted(self.counters):
+            out.setdefault(name, int(self.counters[name]))
+        return out
+
+    def counter_rows(self) -> list[dict]:
+        """Lifecycle counters in the benchmarks row contract.  These
+        rows carry *counts*, not times — ``us_per_call`` holds the raw
+        count so the ``--json`` name → value schema can track them
+        across PRs (documented in ``docs/BENCHMARKS.md``)."""
+        return [
+            {
+                "name": f"serve/counters/{name}",
+                "us_per_call": float(value),
+                "derived": f"count={value}",
+            }
+            for name, value in self.counter_summary().items()
+        ]
 
     def bench_rows(self, cache_stats: dict | None = None) -> list[dict]:
         """Rows in the ``benchmarks.common.emit`` contract."""
@@ -153,6 +205,8 @@ class ServeMetrics:
             )
             if b.errors:
                 derived += f" errors={b.errors}"
+            if b.degraded:
+                derived += f" degraded={b.degraded}"
             if cache_stats is not None:
                 derived += f" cache_hit={cache_stats['hit_rate']:.2f}"
             rows.append({

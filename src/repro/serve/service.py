@@ -1,4 +1,5 @@
-"""The serving front-end: submit → bucket → compile-or-hit → execute.
+"""The serving front-end: admit → bucket → compile-or-hit → execute,
+with a fault-tolerant request lifecycle.
 
 ``Service`` ties the pieces together: the :mod:`registry` validates ops
 and params and lowers each request's expression, the :mod:`bucketer`
@@ -9,6 +10,29 @@ packing: ops with identical compiled run phases co-batch), the
 :class:`ChainPlan`, and the :mod:`executor` runs the double-buffered
 pipeline and demuxes results, applying each request's own finalize
 stage.
+
+Robustness contract (full version in ``docs/ROBUSTNESS.md``):
+
+* **admission** rejects malformed requests *synchronously* with typed
+  errors (:mod:`repro.serve.errors`) before they can poison a bucket:
+  arity/shape/dtype validation, lattice-dtype and non-finite payload
+  checks (``bucketer.check_payload``), and load shedding when the
+  bounded queue (``max_queue``) is full;
+* **deadlines**: each request may carry one (``deadline_ms`` per
+  request, ``default_deadline_ms`` service-wide); expired requests are
+  shed at launch with :class:`DeadlineExceededError` instead of wasting
+  device time;
+* **execution failures** never escape ``poll()``/``flush()``/
+  ``submit()``: the executor retries the batch with backoff, then
+  bisect-quarantines so only poisoned requests fail (typed) while
+  healthy co-batched requests complete bit-exactly;
+* **partial convergence** (scheduler watchdog) is delivered as a
+  degraded result (``Ticket.degraded``), counted per bucket and in the
+  lifecycle counters.
+
+Deterministic fault injection (``serve/faults.py``, ``REPRO_FAULTS``)
+enters at the named sites; a Service built without ``faults=`` picks up
+the environment schedule.
 
 The service is single-threaded and cooperatively scheduled: ``submit``
 launches a bucket the moment it fills, and every ``submit``/``poll``
@@ -30,11 +54,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
+from repro.serve import faults as F
 from repro.serve import registry
 from repro.serve.bucketer import (BucketKey, BucketQueue, PendingRequest,
                                   Ticket, bucket_hw, canonical_batch,
-                                  pad_fill)
+                                  check_payload, pad_fill)
 from repro.serve.cache import CacheEntry, CompiledProgramCache
+from repro.serve.errors import (DeadlineExceededError, InvalidRequestError,
+                                QueueFullError)
 from repro.serve.executor import Executor
 from repro.serve.metrics import ServeMetrics
 
@@ -49,52 +76,83 @@ class Service:
         pad_quantum: int = 64,
         cache_capacity: int = 64,
         pipeline_depth: int = 2,
+        max_queue: int | None = None,
+        default_deadline_ms: float | None = None,
+        max_retries: int = 2,
+        retry_backoff_ms: float = 0.0,
         clock=time.monotonic,
+        sleep=time.sleep,
+        faults: F.FaultInjector | None = None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None for unbounded)")
         self.backend = backend
         self.max_batch = max_batch
         self.pad_quantum = pad_quantum
+        self.max_queue = max_queue
+        self.default_deadline_ms = default_deadline_ms
         self.clock = clock
+        self.faults = faults if faults is not None else F.from_env()
         self.metrics = ServeMetrics()
         self.cache = CompiledProgramCache(cache_capacity)
         self.executor = Executor(self.metrics, depth=pipeline_depth,
-                                 clock=clock)
+                                 clock=clock, faults=self.faults,
+                                 max_retries=max_retries,
+                                 backoff_s=retry_backoff_ms / 1e3,
+                                 sleep=sleep)
         self._queue = BucketQueue(max_batch, max_delay_ms / 1e3)
         self._next_id = 0
 
     # -- request intake ----------------------------------------------------
 
-    def submit(self, op: str, *images, params=None) -> Ticket:
+    def submit(self, op: str, *images, params=None,
+               deadline_ms: float | None = None) -> Ticket:
         """Enqueue one request; returns a :class:`Ticket` whose
-        ``result()`` drives the pipeline as needed."""
-        spec = registry.get(op)
-        if len(images) != spec.arity:
-            raise ValueError(
-                f"op {op!r} takes {spec.arity} image(s), got {len(images)}"
+        ``result()`` drives the pipeline as needed.
+
+        Admission is the only stage that raises: malformed requests get
+        a typed :class:`~repro.serve.errors.RequestRejected` subclass,
+        a full bounded queue gets :class:`QueueFullError`.  Once a
+        ticket is returned, every later failure is recorded *on the
+        ticket* (typed), never raised from ``poll``/``flush``.
+
+        ``deadline_ms`` (or the service's ``default_deadline_ms``)
+        bounds how long the request may sit queued: expired requests
+        are shed at launch with :class:`DeadlineExceededError`.
+        """
+        try:
+            spec, imgs, canon = self._admit(op, images, params)
+        except Exception:
+            self.metrics.count("rejected")
+            raise
+        if (self.max_queue is not None
+                and len(self._queue) >= self.max_queue):
+            self.metrics.count("shed")
+            raise QueueFullError(
+                f"op {op!r}: queue full ({self.max_queue} pending) — "
+                "request load-shed; retry later or raise max_queue"
             )
-        imgs = tuple(np.asarray(im) for im in images)
-        for im in imgs:
-            if im.ndim != 2:
-                raise ValueError(
-                    f"op {op!r}: expected 2-D images, got shape {im.shape}"
-                )
-            if im.shape != imgs[0].shape or im.dtype != imgs[0].dtype:
-                raise ValueError(
-                    f"op {op!r}: all inputs must share shape/dtype; got "
-                    f"{[(i.shape, str(i.dtype)) for i in imgs]}"
-                )
-        canon = spec.canonical_params(params)
         info = registry.request_info(op, canon)
 
-        ticket = Ticket(request_id=self._next_id, op=op,
-                        t_enqueue=self.clock(), _service=self)
+        if self.faults.should_fire("deadline"):
+            deadline_ms = self.faults.value("deadline", 0.0)
+        if deadline_ms is None:
+            deadline_ms = self.default_deadline_ms
+
+        now = self.clock()
+        ticket = Ticket(
+            request_id=self._next_id, op=op, t_enqueue=now,
+            deadline=None if deadline_ms is None else now + deadline_ms / 1e3,
+            _service=self,
+        )
         self._next_id += 1
         req = PendingRequest(
             ticket=ticket, images=imgs,
             inputs=spec.prepare_inputs(imgs, canon), shape=imgs[0].shape,
             info=info, finalize=registry.request_finalize(op, canon),
+            poisoned=self.faults.should_fire("poison"),
         )
         key = self._bucket_for(info, imgs[0].shape, imgs[0].dtype)
         ticket._bucket_key = key
@@ -104,8 +162,34 @@ class Service:
         self.poll()
         return ticket
 
+    def _admit(self, op: str, images, params):
+        """Admission validation: typed rejections, nothing staged yet."""
+        spec = registry.get(op)
+        if len(images) != spec.arity:
+            raise InvalidRequestError(
+                f"op {op!r} takes {spec.arity} image(s), got {len(images)}"
+            )
+        imgs = tuple(np.asarray(im) for im in images)
+        for im in imgs:
+            if im.ndim != 2:
+                raise InvalidRequestError(
+                    f"op {op!r}: expected 2-D images, got shape {im.shape}"
+                )
+            if im.shape != imgs[0].shape or im.dtype != imgs[0].dtype:
+                raise InvalidRequestError(
+                    f"op {op!r}: all inputs must share shape/dtype; got "
+                    f"{[(i.shape, str(i.dtype)) for i in imgs]}"
+                )
+        check_payload(op, imgs)  # lattice dtype + non-finite rejection
+        return spec, imgs, spec.canonical_params(params)
+
     def poll(self) -> None:
-        """Launch buckets whose oldest request exceeded max_delay_ms."""
+        """Launch buckets whose oldest request exceeded max_delay_ms.
+
+        Part of the robustness contract: ``poll`` never raises — batch
+        failures resolve into typed per-ticket errors via the
+        executor's recovery ladder.
+        """
         for key in self._queue.due(self.clock()):
             self._launch(key)
 
@@ -130,22 +214,67 @@ class Service:
 
     def _launch(self, key: BucketKey) -> None:
         requests = self._queue.pop(key)
-        if not requests:
-            return
         for req in requests:
             req.ticket._queued = False
+        requests = self._shed_expired(requests)
+        if not requests:
+            return
         info = requests[0].info
+        runner = functools.partial(self._run_sync, key, info)
         n_slots = canonical_batch(len(requests), self.max_batch)
         try:
             entry = self._entry_for(key, info, n_slots, warm=False)
             stacked = self._stage(info, key, requests, n_slots)
+            self.faults.check("dispatch", key.label())
+            self._check_poison(requests)
         except Exception as exc:
-            # the requests are already out of the queue: resolve their
-            # tickets with the error instead of stranding them (the
-            # dispatch path inside the executor does the same).
-            self.executor._fail_batch(requests, exc)
-            raise
-        self.executor.dispatch(entry, key, requests, n_slots, stacked)
+            # staging/compile/injected failure before dispatch: the
+            # requests are already out of the queue — hand them to the
+            # recovery ladder instead of stranding them (or raising out
+            # of poll()).
+            self.executor.recover(key, requests, runner, exc)
+            return
+        self.executor.dispatch(entry, key, requests, n_slots, stacked,
+                               runner=runner)
+
+    def _shed_expired(self, requests):
+        """Deadline shedding at launch: typed errors, no device time."""
+        now = self.clock()
+        live = []
+        for req in requests:
+            t = req.ticket
+            if t.deadline is not None and now > t.deadline:
+                t.error = DeadlineExceededError(
+                    f"request {t.request_id} ({t.op}) waited "
+                    f"{(now - t.t_enqueue) * 1e3:.1f}ms, past its deadline"
+                )
+                t.done = True
+                t.t_done = now
+                self.metrics.count("expired")
+            else:
+                live.append(req)
+        return live
+
+    @staticmethod
+    def _check_poison(requests) -> None:
+        """Fault site: a poisoned request kills any batch containing it
+        (deterministically — that is what bisect-retry needs)."""
+        for req in requests:
+            if req.poisoned:
+                raise F.InjectedFault(
+                    "poison", f"request {req.ticket.request_id}")
+
+    def _run_sync(self, key: BucketKey, info, requests):
+        """Synchronous (re-)execution for the executor's recovery
+        ladder: restage the given subset, run, block.  Returns
+        ``(outputs, n_slots, converged)``."""
+        n_slots = canonical_batch(len(requests), self.max_batch)
+        entry = self._entry_for(key, info, n_slots, warm=False)
+        stacked = self._stage(info, key, requests, n_slots)
+        self._check_poison(requests)
+        outputs, conv = Executor._call_entry(entry, stacked)
+        jax.block_until_ready((outputs, conv))
+        return outputs, n_slots, conv
 
     def _bucket_for(self, info, shape, dtype) -> BucketKey:
         """The one place (submit + warmup) bucket keys are derived."""
@@ -159,10 +288,17 @@ class Service:
 
     def _cache_identity(self, key: BucketKey, info, n_slots: int):
         """The cache key (and, for expression ops, the Executable —
-        compiling is a cheap cached lookup)."""
+        compiling is a cheap cached lookup).  The ``budget`` fault site
+        compiles with an injected ``max_chunks``; since ``max_chunks``
+        is part of ``Executable.key``, injected and clean programs never
+        share a cache entry."""
         if info.expr is not None:
-            exe = api.compile(info.expr, (n_slots, *key.hw),
-                              np.dtype(key.dtype), self.backend)
+            budget = self.faults.value("budget", None)
+            exe = api.compile(
+                info.expr, (n_slots, *key.hw), np.dtype(key.dtype),
+                self.backend,
+                max_chunks=None if budget is None else int(budget),
+            )
             return exe.key, exe
         return (info.sig, (n_slots, *key.hw), key.dtype, self.backend), None
 
@@ -175,7 +311,8 @@ class Service:
             return lookup(
                 cache_key,
                 lambda: CacheEntry(fn=exe.run_batch, plan=exe.plan,
-                                   key=cache_key),
+                                   key=cache_key,
+                                   stats_fn=exe.run_batch_stats),
             )
         spec = registry.get(info.sig[1])  # ("custom", name, canon)
         return lookup(
@@ -237,15 +374,22 @@ class Service:
                 continue  # already resident: don't re-execute the program
             entry = self._entry_for(key, info, n_slots, warm=True)
             stacked = self._stage(info, key, [], n_slots)
-            jax.block_until_ready(entry.fn(*stacked))
+            # execute the callable dispatch will use (the stats variant
+            # for expression programs), so first traffic pays no trace
+            jax.block_until_ready(entry.primary()(*stacked))
 
     def stats(self) -> dict:
-        """Metrics summary (buckets/totals/cache), JSON-serializable."""
-        return self.metrics.summary(self.cache.stats())
+        """Metrics summary (buckets/totals/counters/cache/faults),
+        JSON-serializable."""
+        out = self.metrics.summary(self.cache.stats())
+        out["faults"] = self.faults.snapshot()
+        return out
 
     def bench_rows(self) -> list[dict]:
-        """Rows in the benchmarks ``name,us_per_call,derived`` contract."""
-        return self.metrics.bench_rows(self.cache.stats())
+        """Rows in the benchmarks ``name,us_per_call,derived`` contract
+        (per-bucket latency/throughput plus the lifecycle counters)."""
+        return (self.metrics.bench_rows(self.cache.stats())
+                + self.metrics.counter_rows())
 
     def pending(self) -> int:
         return len(self._queue)
