@@ -12,6 +12,11 @@ row contract:
 * **Compile-cache hit rate** — the steady-state cost of routing every
   legacy sugar call through ``repro.api.compile`` (a cache lookup), and
   the hit rate over a replayed mixed operator workload.
+* **Rewrites on vs off** — redundant composites (ASF over an opening,
+  OBR∘OBR, a re-stabilized DOME) compiled with the expression optimizer
+  enabled and disabled.  The derived column carries the static
+  launches/pads saved by the algebraic rewrites next to the wall-clock
+  ratio; outputs are asserted bit-exact before the row is emitted.
 """
 from __future__ import annotations
 
@@ -70,6 +75,51 @@ def run(quick: bool = True):
         "us_per_call": timeit(exe, f, repeats=2) * 1e6,
         "derived": f"pads={st['pads']} launches={st['launches']}",
     })
+
+    # optimizer: redundant composites with rewrites on vs off.  Each
+    # pair must be bit-exact; the optimizer's win is the static
+    # launches/pads delta (and whatever wall clock follows from it).
+    E = api.E
+    g = E.input("f")
+    composites = {
+        # ASF_2 stacked on an opening(1) the ASF's own γ_1 absorbs
+        "ASF2_over_opening": api.asf_expr(s, E.opening(1, g)),
+        # opening-by-reconstruction applied twice (γ_rec idempotence)
+        "OBR4_twice": E.reconstruct(
+            E.erode(4, E.reconstruct(E.erode(4, g), g, op="dilate")),
+            g, op="dilate"),
+        # DOME whose hmax was redundantly re-stabilized (Rec∘Rec)
+        "DOME_restab": E.sub(g, E.reconstruct(
+            E.reconstruct(E.sat_sub(g, 40), g, op="dilate"),
+            g, op="dilate")),
+    }
+    for name, expr in composites.items():
+        exe_on = api.compile(expr, f.shape, f.dtype, "pallas")
+        exe_off = api.compile(expr, f.shape, f.dtype, "pallas",
+                              rewrite=False)
+        st_on, st_off = exe_on.stats(), exe_off.stats()
+        out_on, out_off = exe_on(f), exe_off(f)
+        assert np.array_equal(np.asarray(out_on), np.asarray(out_off)), \
+            f"optimizer changed {name} output"
+        t_on = timeit(exe_on, f, repeats=2)
+        t_off = timeit(exe_off, f, repeats=2)
+        d_launch = st_off["launches"] - st_on["launches"]
+        d_pads = st_off["pads"] - st_on["pads"]
+        rows.append({
+            "name": f"pipeline/opt/{name}_rewritten_pallas/{size}px",
+            "us_per_call": t_on * 1e6,
+            "derived": (f"launches={st_on['launches']} "
+                        f"pads={st_on['pads']} "
+                        f"saved_launches={d_launch} "
+                        f"saved_pads={d_pads} "
+                        f"ratio={t_off / t_on:.2f}x"),
+        })
+        rows.append({
+            "name": f"pipeline/opt/{name}_unrewritten_pallas/{size}px",
+            "us_per_call": t_off * 1e6,
+            "derived": (f"launches={st_off['launches']} "
+                        f"pads={st_off['pads']}"),
+        })
 
     # compile-cache steady state: replay a mixed workload through the
     # legacy sugar (every call routes through api.compile)

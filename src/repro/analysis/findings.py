@@ -22,8 +22,9 @@ import dataclasses
 ERROR = "error"
 WARN = "warn"
 
-#: The five check classes (ISSUE 6); every Finding carries one.
-CHECKS = ("halo", "dtype", "plan", "cache-key", "index-map")
+#: The check classes (ISSUE 6 + the rewrite soundness hook of
+#: ISSUE 8); every Finding carries one.
+CHECKS = ("halo", "dtype", "plan", "cache-key", "index-map", "rewrite")
 
 
 @dataclasses.dataclass(frozen=True)

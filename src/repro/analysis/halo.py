@@ -172,7 +172,8 @@ def check_program(program) -> list:
     return out
 
 
-def check_coverage(program, plan, shape3=None) -> list:
+def check_coverage(program, plan, shape3=None, segments=None,
+                   convergent=None) -> list:
     """Reach coverage of ``program`` under ``plan`` (pallas schedule).
 
     ``plan`` provides ``fuse_k`` halo rows per launch and runs
@@ -180,10 +181,19 @@ def check_coverage(program, plan, shape3=None) -> list:
     by construction; what can drift is the *cross-launch* accounting:
     the plan's ``n_chunks`` under-covering the longest fixed chain, or
     the plan not covering the bound image at all.
+
+    ``segments``/``convergent`` restrict the check to one plan group of
+    a specialized executable (``Executable.seg_plans``): the group's
+    segment subset is proved against the group's own plan.  Defaults
+    cover the whole program under its single shared plan.
     """
     out = []
     if plan is None:
         return out
+    if segments is None:
+        segments = program.segments
+    if convergent is None:
+        convergent = program.convergent
     if shape3 is not None:
         n, h, w = shape3
         if plan.n_images != n:
@@ -196,10 +206,10 @@ def check_coverage(program, plan, shape3=None) -> list:
                 f"plan pads ({plan.height_pad}, {plan.width_pad}) do not "
                 f"cover the image ({h}, {w}) — the crop would read "
                 "identity fill"))
-    reaches = [r for s in program.segments
+    reaches = [r for s in segments
                if (r := segment_reach(s)) is not None and s.kind != "refill"]
     max_reach = max(reaches, default=0)
-    if not program.convergent and max_reach:
+    if not convergent and max_reach:
         covered = plan.n_chunks * plan.fuse_k
         if covered < max_reach:
             out.append(Finding(

@@ -8,9 +8,17 @@ index-map enumeration, cache-key mutation sweeps, dtype audits and
 Mosaic-readiness diagnostics.  The serve bucketer's pad fills are
 audited once against the kernel lattice identities on top.
 
+Because the expression optimizer is on by default, every compiled
+case is the *rewritten* program — a clean sweep asserts the rewritten
+registry lints clean.  ``--rewrites`` additionally replays every
+applied optimizer rule per op on randomized small inputs
+(``repro.analysis.rewrites``), demanding bit-exactness against the
+unrewritten graph — the CI program-lint job runs with it.
+
 Exit status: 1 when any ERROR-severity finding survives (or any WARN
-under ``--strict``), 0 otherwise — the CI gate.  Nothing is executed:
-a clean sweep is a set of static proofs about every program the
+under ``--strict``), 0 otherwise — the CI gate.  Apart from the
+``--rewrites`` replay (tiny oracle programs), nothing is executed: a
+clean sweep is a set of static proofs about every program the
 registry can currently lower.
 """
 from __future__ import annotations
@@ -56,7 +64,8 @@ def iter_registry_cases(ops=None, dtypes=DTYPES, shapes=SHAPES,
 
 
 def run_lint(ops=None, dtypes=DTYPES, shapes=SHAPES, backends=BACKENDS,
-             level="full", verbose=False, out=sys.stdout) -> Report:
+             level="full", rewrites=False, verbose=False,
+             out=sys.stdout) -> Report:
     from repro.api.compile import compile as api_compile
 
     total = Report(subject="repro.analysis.lint")
@@ -64,9 +73,11 @@ def run_lint(ops=None, dtypes=DTYPES, shapes=SHAPES, backends=BACKENDS,
     # restricted to the sweep matrix — it is cheap and shape-free
     total.extend(dtype_checks.check_bucketer_fills())
     n_cases = 0
+    seen_exprs: dict = {}
     for label, expr, shape3, dtype, backend in iter_registry_cases(
             ops, dtypes, shapes, backends):
         n_cases += 1
+        seen_exprs.setdefault(label.split("[")[0], expr)
         try:
             exe = api_compile(expr, shape3, dtype, backend, verify=False)
         except VerificationError as e:  # pragma: no cover - verify=False
@@ -77,9 +88,30 @@ def run_lint(ops=None, dtypes=DTYPES, shapes=SHAPES, backends=BACKENDS,
             print(f"{label}: {len(report.errors())} error(s), "
                   f"{len(report.warnings())} warning(s)", file=out)
         total.extend(report.findings)
-    print(f"lint: {n_cases} registry case(s) verified — "
-          f"{len(total.errors())} error(s), "
-          f"{len(total.warnings())} warning(s)", file=out)
+    n_rewritten = 0
+    if rewrites:
+        # optimizer soundness sweep: once per op (the trace and the
+        # canonical graph do not depend on the shape/backend matrix)
+        from repro.analysis.rewrites import check_rewrites
+        from repro.opt import rewrite_traced
+
+        for name, expr in sorted(seen_exprs.items()):
+            result = rewrite_traced(expr)
+            findings = check_rewrites(expr)
+            if result.changed:
+                n_rewritten += 1
+            if verbose or findings:
+                rules = ",".join(a.rule for a in result.trace) or "-"
+                print(f"rewrites[{name}]: {result.n_applied} applied "
+                      f"({rules}), {len(findings)} finding(s)", file=out)
+            total.extend(findings)
+    msg = (f"lint: {n_cases} registry case(s) verified — "
+           f"{len(total.errors())} error(s), "
+           f"{len(total.warnings())} warning(s)")
+    if rewrites:
+        msg += (f"; rewrite soundness replayed on {len(seen_exprs)} op(s) "
+                f"({n_rewritten} rewritten)")
+    print(msg, file=out)
     return total
 
 
@@ -96,7 +128,12 @@ def main(argv=None) -> int:
                    help="NxHxW triples, e.g. 4x48x96")
     p.add_argument("--backends", nargs="*", default=list(BACKENDS),
                    choices=["pallas", "xla"])
-    p.add_argument("--level", default="full", choices=["fast", "full"])
+    p.add_argument("--level", default="full",
+                   choices=["fast", "full", "sound"])
+    p.add_argument("--rewrites", action="store_true",
+                   help="additionally replay the expression optimizer's "
+                        "rewrites on every registry op (numeric "
+                        "bit-exactness, randomized small inputs)")
     p.add_argument("--strict", action="store_true",
                    help="treat warnings as errors")
     p.add_argument("-v", "--verbose", action="store_true",
@@ -112,7 +149,8 @@ def main(argv=None) -> int:
 
     report = run_lint(ops=args.ops, dtypes=tuple(args.dtypes),
                       shapes=shapes, backends=tuple(args.backends),
-                      level=args.level, verbose=args.verbose)
+                      level=args.level, rewrites=args.rewrites,
+                      verbose=args.verbose)
     for f in report.findings:
         print(f)
     failed = report.errors() or (args.strict and report.warnings())

@@ -1,23 +1,31 @@
 """Verification orchestration: one executable in, one report out.
 
-Two levels:
+Three levels:
 
 ``fast``
     the always-on compile hook (``api/compile.py`` runs it on every
     cache-miss build when ``REPRO_VERIFY`` is enabled — the test suite
     turns it on in ``conftest.py``).  Pure-Python structural proofs
     only: program well-formedness + pad-state discipline, plan
-    constraints, reach coverage, executable-bound dtype facts.
-    Micro-seconds per compile; no spec evaluation, no key mutation.
+    constraints and reach coverage (per plan group when the executable
+    is specialized), executable-bound dtype facts.  Micro-seconds per
+    compile; no spec evaluation, no key mutation.
 ``full``
     everything ``fast`` proves, plus numeric index-map enumeration over
-    the plan's whole grid, cache-key mutation sweeps, and the
+    every plan's whole grid, cache-key mutation sweeps, and the
     Mosaic-readiness diagnostics.  This is what the lint CLI and the
     mutation self-tests run.
+``sound``
+    everything ``full`` proves, plus the rewrite soundness hook
+    (``repro.analysis.rewrites``): every optimizer rule application the
+    executable was compiled with is replayed on randomized small
+    inputs and must be bit-exact.  The one level that *executes*
+    anything — and only tiny oracle programs, never the compiled
+    kernels under test.
 
-The functions never execute the compiled program — every fact is read
-off the lowered ``Program``, the ``ChainPlan`` and the ``BlockSpec``
-geometry.
+Below ``sound``, the functions never execute the compiled program —
+every fact is read off the lowered ``Program``, the ``ChainPlan`` and
+the ``BlockSpec`` geometry.
 """
 from __future__ import annotations
 
@@ -28,7 +36,7 @@ from repro.analysis.findings import Report
 
 __all__ = ["verify_executable", "verify_on_compile", "LEVELS"]
 
-LEVELS = ("fast", "full")
+LEVELS = ("fast", "full", "sound")
 
 
 def verify_executable(exe, level: str = "fast") -> Report:
@@ -40,16 +48,29 @@ def verify_executable(exe, level: str = "fast") -> Report:
 
     report.extend(halo.check_program(exe.program))
     report.extend(dtypes.check_executable_dtypes(exe))
-    if exe.plan is not None:
+    if exe.seg_plans is not None:
+        segs = exe.program.segments
+        for idxs, plan in exe.seg_plans:
+            group = tuple(segs[i] for i in idxs)
+            conv = any(s.kind in ("reconstruct", "qdt") for s in group)
+            report.extend(plans.check_plan(plan, shape3))
+            report.extend(halo.check_coverage(
+                exe.program, plan, shape3, segments=group, convergent=conv))
+    elif exe.plan is not None:
         report.extend(plans.check_plan(exe.plan, shape3))
         report.extend(halo.check_coverage(exe.program, exe.plan, shape3))
 
-    if level == "full":
-        if exe.plan is not None:
-            report.extend(indexmaps.check_plan_index_maps(exe.plan))
-            report.extend(plans.check_mosaic_readiness(exe.plan, exe.dtype))
-            report.extend(cachekeys.check_plan_key(exe.plan))
+    if level in ("full", "sound"):
+        for plan in exe.all_plans:
+            report.extend(indexmaps.check_plan_index_maps(plan))
+            report.extend(plans.check_mosaic_readiness(plan, exe.dtype))
+            report.extend(cachekeys.check_plan_key(plan))
         report.extend(cachekeys.check_executable_key(exe))
+
+    if level == "sound" and exe.rewrite_trace:
+        from repro.analysis import rewrites
+
+        report.extend(rewrites.check_trace(exe.rewrite_trace))
     return report
 
 

@@ -1,24 +1,34 @@
 """Executable: a compiled expression bound to (shape, dtype, backend).
 
 The run phase executes the lowered :class:`~repro.api.lower.Program`
-as **one padded program**: every canonical input is padded to the
-shared :class:`~repro.core.chain.ChainPlan` exactly once, all kernel
-segments run on the vertically stacked ``(N·H_pad, W_pad)`` working
-arrays (chains via ``chain_step`` scans, convergence-driven segments
-via the requeue scheduler in ``kernels/ops.py``), and outputs are
-cropped exactly once.  Between segments that need a different absorbing
-identity in the pad region, the lowered ``refill`` segments apply a
-masked fill in place of the legacy crop → re-pad → re-plan round-trip.
+as **one padded program per plan group**: by default every canonical
+input is padded to the shared :class:`~repro.core.chain.ChainPlan`
+exactly once, all kernel segments run on the vertically stacked
+``(N·H_pad, W_pad)`` working arrays (chains via ``chain_step`` scans,
+convergence-driven segments via the requeue scheduler in
+``kernels/ops.py``), and outputs are cropped exactly once.  Between
+segments that need a different absorbing identity in the pad region,
+the lowered ``refill`` segments apply a masked fill in place of the
+legacy crop → re-pad → re-plan round-trip.
+
+When the compiler specializes a mixed program (``compile(...,
+specialize=...)``), the segment list is partitioned into contiguous
+*plan groups* — fixed-length chain groups and convergent
+reconstruction/QDT groups — each with its own ``ChainPlan``
+(``seg_plans``).  Values crossing a group boundary take a *re-band*
+round-trip: cropped out of the producer group's band layout and
+re-padded with the pad identity the consumer group's lowering expects,
+so the halo-exactness argument of each group composes unchanged.
 
 ``backend="xla"`` executes the same program with the pure-jnp oracle
 bodies on unpadded arrays — bit-exact with the Pallas path by the
 repo's exactness convention (see ``docs/ARCHITECTURE.md``).
 
 ``Executable.key`` — the lowered run signature + bound shape/dtype/
-backend + ``plan.key`` — is simultaneously the compile-cache key and
-the ``repro.serve`` bucket/cache identity, which is what lets different
-operators with identical run phases (HMAX vs DOME) share one compiled
-bucket program.
+backend + ``plan.key`` (+ the per-group plan keys when specialized) —
+is simultaneously the compile-cache key and the ``repro.serve``
+bucket/cache identity, which is what lets different operators with
+identical run phases (HMAX vs DOME) share one compiled bucket program.
 """
 from __future__ import annotations
 
@@ -37,9 +47,23 @@ from repro.kernels.geodesic_chain import geodesic_chain_step
 #: pad-fill name → the op whose lattice identity it is
 _FILL_OP = {"hi": "erode", "lo": "dilate"}
 
+#: op → the absorbing pad identity its operands need (dual of _FILL_OP)
+_NEED_FILL = {"erode": "hi", "dilate": "lo"}
+
 
 def _fill_value(fill: str, dtype):
     return ident_for(_FILL_OP[fill], dtype)
+
+
+def _seg_need_fill(seg) -> str:
+    """Pad identity ``seg`` expects of an operand re-entering padded
+    form at a group boundary."""
+    if seg.kind == "refill":
+        # the masked fill overwrites the pad region anyway
+        return seg.param("fill")
+    if seg.kind == "qdt":
+        return "hi"  # the QDT iterates erosion
+    return _NEED_FILL[seg.param("op")]
 
 
 class Executable:
@@ -51,10 +75,20 @@ class Executable:
     serve executor's per-bucket program).  ``stats()`` reports the
     static pad/launch/refill accounting of the compiled program — the
     fusion wins of the expression API are visible there.
+
+    ``seg_plans`` (keyword-only) activates per-segment plan
+    specialization: a tuple of ``(segment_indices, ChainPlan)`` groups
+    covering ``program.segments`` in order.  ``plan`` then remains the
+    primary (first-group) plan for introspection; ``all_plans`` lists
+    every group's.  ``rewrite_trace`` carries the optimizer's
+    :class:`~repro.opt.engine.Applied` steps for this program (empty
+    when compiled with ``rewrite=False`` or nothing fired) — the
+    soundness hook in ``repro.analysis.rewrites`` replays it.
     """
 
     def __init__(self, program: Program, shape3: tuple, dtype, backend: str,
-                 plan, max_chunks: int | None, was_2d: bool):
+                 plan, max_chunks: int | None, was_2d: bool, *,
+                 seg_plans=None, rewrite_trace=()):
         self.program = program
         self.n_images, self.height, self.width = shape3
         self.dtype = jnp.dtype(dtype)
@@ -62,24 +96,24 @@ class Executable:
         self.plan = plan
         self.max_chunks = max_chunks
         self.was_2d = was_2d
+        self.seg_plans = tuple(seg_plans) if seg_plans else None
+        self.rewrite_trace = tuple(rewrite_trace)
+        self._mask_cache: dict = {}
         if plan is not None:
-            k = plan.fuse_k
-            self._max_chunks_rec = (
-                max_chunks if max_chunks is not None
-                else (self.height * self.width) // k + 2
-            )
-            self._max_chunks_qdt = (
-                max_chunks if max_chunks is not None
-                else max(self.height, self.width) // k + 2
-            )
+            self._max_chunks_rec = self._budget_rec(plan)
+            self._max_chunks_qdt = self._budget_qdt(plan)
         # Every field that can change what a call computes or returns
         # must appear here — ``repro.analysis.cachekeys`` perturbs each
         # one and asserts the key moves (``max_chunks`` truncates
         # convergent segments; ``was_2d`` changes the output rank).
+        # ``rewrite_trace`` is deliberately absent: it is provenance,
+        # not behaviour — the program it produced is already keyed.
+        seg_key = (tuple((idxs, p.key) for idxs, p in self.seg_plans)
+                   if self.seg_plans is not None else None)
         self.key = (
             program.run_sig, shape3, str(self.dtype), backend,
             plan.key if plan is not None else None,
-            max_chunks, was_2d,
+            max_chunks, was_2d, seg_key,
         )
 
     # -- public ------------------------------------------------------------
@@ -122,26 +156,39 @@ class Executable:
         fixpoint) report all-True."""
         return self._run_stats_fn(*canonical)
 
+    @property
+    def all_plans(self) -> tuple:
+        """Every ChainPlan this executable runs under (primary first)."""
+        if self.seg_plans is not None:
+            return tuple(p for _, p in self.seg_plans)
+        return (self.plan,) if self.plan is not None else ()
+
     def stats(self) -> dict:
         """Static accounting of the compiled program (pads, launches,
         refills): what the fusion tests and the pipeline benchmarks
         count.  ``pads``/``crops`` are the pad/crop round-trips of one
-        execution; the legacy per-stage path pays one of each per
-        elementary operator stage.  ``convergent``/``chunk_budget_rec``
-        /``chunk_budget_qdt`` describe the watchdog configuration the
+        execution (including the re-band round-trips at specialized
+        group boundaries); the legacy per-stage path pays one of each
+        per elementary operator stage.  ``plans`` counts the plan
+        groups, ``rebands`` the group boundaries values re-band
+        across.  ``convergent``/``chunk_budget_rec``/
+        ``chunk_budget_qdt`` describe the watchdog configuration the
         convergence-driven segments run under; the *runtime* verdict
         for a particular execution comes from :meth:`run_batch_stats`
         (or ``ReconstructStats.converged`` on the engine entry
         points)."""
         prog = self.program
+        groups = self._exec_groups
         return {
             "backend": self.backend,
-            "pads": len(prog.run_fills) if self.plan is not None else 0,
-            "crops": len(prog.run_outputs) if self.plan is not None else 0,
+            "pads": sum(len(pads) for _, _, pads, _ in groups),
+            "crops": sum(len(crops) for _, _, _, crops in groups),
             "launches": len(prog.kernel_segments),
             "refills": sum(1 for s in prog.segments if s.kind == "refill"),
             "fused_chain_len": prog.fused_chain_len,
             "plan_key": self.plan.key if self.plan is not None else None,
+            "plans": len(groups),
+            "rebands": max(0, len(groups) - 1),
             "convergent": prog.convergent,
             "chunk_budget_rec": (self._max_chunks_rec
                                  if self.plan is not None else None),
@@ -172,6 +219,14 @@ class Executable:
                 f"dtype {self.dtype}"
             )
         return a
+
+    def _budget_rec(self, plan) -> int:
+        return (self.max_chunks if self.max_chunks is not None
+                else (self.height * self.width) // plan.fuse_k + 2)
+
+    def _budget_qdt(self, plan) -> int:
+        return (self.max_chunks if self.max_chunks is not None
+                else max(self.height, self.width) // plan.fuse_k + 2)
 
     @functools.cached_property
     def _call_fn(self):
@@ -247,68 +302,125 @@ class Executable:
                 raise AssertionError(seg.kind)
         return tuple(vals[s] for s in self.program.run_outputs)
 
-    # -- pallas engine: one padded program ---------------------------------
+    # -- pallas engine: one padded program per plan group ------------------
+
+    @property
+    def _groups(self) -> tuple:
+        """``(segment_indices, plan)`` plan groups, in execution order."""
+        if self.seg_plans is not None:
+            return self.seg_plans
+        if self.plan is None:
+            return ()
+        return ((tuple(range(len(self.program.segments))), self.plan),)
 
     @functools.cached_property
-    def _image_mask(self):
+    def _exec_groups(self) -> tuple:
+        """Static execution schedule: per group, the ``(slot, fill)``
+        pads to apply on entry (first-consume order) and the dst slots
+        to crop back to unpadded form on exit (consumed by a later
+        group, or a run output)."""
+        prog = self.program
+        segs = prog.segments
+        groups = self._groups
+        # abstract pad state a slot's cropped value must be re-padded
+        # with: inputs carry their declared fill, refill outputs their
+        # target fill; kernel outputs are dirty (None) — only a masked
+        # refill may consume them across a boundary, and its own fill
+        # is then used (the mask overwrites the pad region regardless).
+        fill_state: dict = dict(zip(prog.run_input_slots, prog.run_fills))
+        for seg in segs:
+            for d in seg.dsts:
+                fill_state[d] = (seg.param("fill") if seg.kind == "refill"
+                                 else None)
+        out = []
+        for gi, (idxs, plan) in enumerate(groups):
+            local: set = set()
+            pad_map: dict = {}
+            for i in idxs:
+                seg = segs[i]
+                for s in seg.srcs:
+                    if s in local or s in pad_map:
+                        continue
+                    pad_map[s] = fill_state.get(s) or _seg_need_fill(seg)
+                local.update(seg.dsts)
+            later: set = set(prog.run_outputs)
+            for idxs2, _ in groups[gi + 1:]:
+                for i in idxs2:
+                    later.update(segs[i].srcs)
+            crops = tuple(d for i in idxs for d in segs[i].dsts
+                          if d in later)
+            out.append((tuple(idxs), plan, tuple(pad_map.items()), crops))
+        return tuple(out)
+
+    def _image_mask(self, plan):
         """(TOTAL_H, W_pad) bool: True inside the real image regions."""
-        plan = self.plan
-        rows = (jnp.arange(plan.n_images * plan.height_pad)
-                % plan.height_pad) < self.height
-        cols = jnp.arange(plan.width_pad) < self.width
-        return rows[:, None] & cols[None, :]
+        mask = self._mask_cache.get(plan.key)
+        if mask is None:
+            rows = (jnp.arange(plan.n_images * plan.height_pad)
+                    % plan.height_pad) < self.height
+            cols = jnp.arange(plan.width_pad) < self.width
+            mask = rows[:, None] & cols[None, :]
+            self._mask_cache[plan.key] = mask
+        return mask
 
     def _run_padded(self, canonical, conv: list | None = None):
-        from repro.kernels.ops import _pad, _stacked
+        from repro.kernels.ops import _crop3, _pad, _stacked
 
-        plan = self.plan
-        vals = {}
-        for slot, x, fill in zip(self.program.run_input_slots, canonical,
-                                 self.program.run_fills):
-            x3 = x[None] if x.ndim == 2 else x
-            vals[slot] = _stacked(_pad(x3, plan, _fill_value(fill, x.dtype)))
-        for seg in self.program.segments:
-            self._pallas_seg(seg, vals, conv)
-        return tuple(self._crop2(vals[s]) for s in self.program.run_outputs)
+        prog = self.program
+        vals3 = {
+            slot: (x[None] if x.ndim == 2 else x)
+            for slot, x in zip(prog.run_input_slots, canonical)
+        }
+        for idxs, plan, pads, crops in self._exec_groups:
+            vals2 = {}
+            for s, fill in pads:
+                x3 = vals3[s]
+                vals2[s] = _stacked(_pad(x3, plan,
+                                         _fill_value(fill, x3.dtype)))
+            for i in idxs:
+                self._pallas_seg(prog.segments[i], vals2, plan, conv)
+            for d in crops:
+                vals3[d] = _crop3(vals2[d], self.n_images, self.height,
+                                  self.width)
+        outs = tuple(vals3[s] for s in prog.run_outputs)
+        return tuple(o[0] if self.was_2d else o for o in outs)
 
-    def _pallas_seg(self, seg, vals, conv: list | None = None):
+    def _pallas_seg(self, seg, vals, plan, conv: list | None = None):
         from repro.kernels.ops import _scheduled_qdt, _scheduled_reconstruct
 
-        plan = self.plan
         if seg.kind == "refill":
             x2 = vals[seg.srcs[0]]
             vals[seg.dsts[0]] = jnp.where(
-                self._image_mask, x2,
+                self._image_mask(plan), x2,
                 _fill_value(seg.param("fill"), x2.dtype),
             )
         elif seg.kind == "chain":
             vals[seg.dsts[0]] = self._chain2(
-                vals[seg.srcs[0]], seg.param("op"), seg.param("n"))
+                vals[seg.srcs[0]], seg.param("op"), seg.param("n"), plan)
         elif seg.kind == "geodesic":
             vals[seg.dsts[0]] = self._geodesic2(
                 vals[seg.srcs[0]], vals[seg.srcs[1]],
-                seg.param("op"), seg.param("n"))
+                seg.param("op"), seg.param("n"), plan)
         elif seg.kind == "reconstruct":
             out, _, _, _, img_conv = _scheduled_reconstruct(
                 vals[seg.srcs[0]], vals[seg.srcs[1]], plan,
-                seg.param("op"), self._max_chunks_rec, False,
+                seg.param("op"), self._budget_rec(plan), False,
             )
             vals[seg.dsts[0]] = out
             if conv is not None:
                 conv.append(img_conv)
         elif seg.kind == "qdt":
             _, r, d, img_conv = _scheduled_qdt(vals[seg.srcs[0]], plan,
-                                               self._max_chunks_qdt)
+                                               self._budget_qdt(plan))
             vals[seg.dsts[0]], vals[seg.dsts[1]] = d, r
             if conv is not None:
                 conv.append(img_conv)
         else:  # pragma: no cover
             raise AssertionError(seg.kind)
 
-    def _chain2(self, x2, op, n):
+    def _chain2(self, x2, op, n, plan):
         from repro.kernels.ops import _INTERPRET, _stacked, _unstacked
 
-        plan = self.plan
         full, rem = divmod(n, plan.fuse_k)
         if full:
             def chunk(x, _):
@@ -328,10 +440,9 @@ class Executable:
             x2 = _stacked(x3)
         return x2
 
-    def _geodesic2(self, f2, m2, op, n):
+    def _geodesic2(self, f2, m2, op, n, plan):
         from repro.kernels.ops import _INTERPRET, _stacked, _unstacked
 
-        plan = self.plan
         full, rem = divmod(n, plan.fuse_k)
         if full:
             def chunk(x, _):
@@ -351,10 +462,3 @@ class Executable:
             )
             f2 = _stacked(f3)
         return f2
-
-    def _crop2(self, x2):
-        from repro.kernels.ops import _unstacked
-
-        x3 = _unstacked(x2, self.n_images)
-        out = x3[:, : self.height, : self.width]
-        return out[0] if self.was_2d else out

@@ -147,6 +147,24 @@ def _crop(f3: jnp.ndarray, shape, was_2d: bool) -> jnp.ndarray:
     return out[0] if was_2d else out
 
 
+def _crop3(x2: jnp.ndarray, n: int, h: int, w: int) -> jnp.ndarray:
+    """(N·H_pad, W_pad) stacked working array → unpadded (N, H, W).
+
+    The re-band primitive of the multi-plan executable: a value leaving
+    one plan group's band layout is cropped back to image form here,
+    then ``_pad``-ed into the next group's layout with the pad identity
+    its lowering expects."""
+    return _unstacked(x2, n)[:, :h, :w]
+
+
+def _reband(x2: jnp.ndarray, n: int, h: int, w: int, plan: ChainPlan,
+            fill) -> jnp.ndarray:
+    """Move a stacked working array into ``plan``'s band layout: crop
+    the real image region and re-pad it with ``fill`` (one fused
+    crop → pad round-trip across a plan-group boundary)."""
+    return _stacked(_pad(_crop3(x2, n, h, w), plan, fill))
+
+
 def _stacked(x3: jnp.ndarray) -> jnp.ndarray:
     """(N, H_pad, W_pad) → (N·H_pad, W_pad); free (row-major)."""
     return x3.reshape(x3.shape[0] * x3.shape[1], x3.shape[2])

@@ -1,0 +1,26 @@
+"""Expression optimizer: exact algebraic rewrites over Expr graphs.
+
+The compiler middle-end — runs between composition (``repro.api.expr``)
+and lowering (``repro.api.lower``).  ``rewrite()`` canonicalizes a
+graph with the exactness-provable rule catalog in ``repro.opt.rules``;
+``repro.api.compile`` applies it by default (escape hatch
+``rewrite=False``) and keys its cache on the canonical form, so source
+graphs that are algebraically equal share one compiled program.
+"""
+from repro.opt.engine import (Applied, RewriteResult, clear_rewrite_cache,
+                              rewrite, rewrite_traced)
+from repro.opt.rules import (DEFAULT_RULES, Rule, active_rules,
+                             register_rule, rule_names)
+
+__all__ = [
+    "Applied",
+    "RewriteResult",
+    "Rule",
+    "DEFAULT_RULES",
+    "active_rules",
+    "register_rule",
+    "rule_names",
+    "rewrite",
+    "rewrite_traced",
+    "clear_rewrite_cache",
+]

@@ -40,8 +40,15 @@ LATENCY_WINDOW = 4096
 #:               result returned, Ticket.degraded = True)
 #:   batch_failures    batches whose first execution failed
 #:   quarantine_reruns successful sub-batch re-executions during bisect
+#:   rewrites_applied  optimizer rule applications behind admitted
+#:                     requests (``repro.opt``; 0 for already-canonical
+#:                     graphs)
+#:   programs_shared   times a distinct source graph joined an
+#:                     already-compiled program identity (rewrite
+#:                     canonicalization or run-signature co-batching)
 COUNTERS = ("rejected", "shed", "expired", "retried", "poisoned",
-            "degraded", "batch_failures", "quarantine_reruns")
+            "degraded", "batch_failures", "quarantine_reruns",
+            "rewrites_applied", "programs_shared")
 
 
 @dataclasses.dataclass

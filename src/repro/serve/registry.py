@@ -44,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.api.expr import KERNEL_KINDS
 from repro.api.lower import eval_pointwise, lower
+from repro.opt import rewrite_traced
 
 _TYPES = {"int": int, "float": float, "str": str}
 
@@ -157,7 +158,7 @@ class OpSpec:
 class RunInfo:
     """Everything the service needs to bucket/stage one request."""
 
-    expr: Any                # Expr for expression ops, None for custom
+    expr: Any                # canonical (rewritten) Expr; None for custom
     program: Any             # lowered Program (None for custom)
     sig: tuple               # bucket identity of the run phase
     label: str               # human tag for metrics bucket labels
@@ -165,6 +166,8 @@ class RunInfo:
     n_outputs: int
     fills: tuple             # "hi"/"lo" per canonical input
     pad_safe: bool
+    source: Any = None       # pre-rewrite Expr (None for custom)
+    n_rewrites: int = 0      # optimizer rules applied to reach ``expr``
 
 
 @functools.lru_cache(maxsize=2048)
@@ -183,12 +186,19 @@ def request_info(op: str, canon: tuple) -> RunInfo:
             n_inputs=n_inputs, n_outputs=spec.n_outputs, fills=fills,
             pad_safe=spec.pad_safe,
         )
-    expr = spec.build_expr(canon)
+    source = spec.build_expr(canon)
+    # canonicalize with the expression optimizer so staging, bucketing
+    # and compilation all see one graph — ``api.compile`` re-derives
+    # the same canonical form (memoized), so the compiled program's
+    # prepare/fills match what is staged here
+    rewritten = rewrite_traced(source)
+    expr = rewritten.expr
     prog = lower(expr)
     return RunInfo(
         expr=expr, program=prog, sig=prog.run_sig, label=prog.sig_label(),
         n_inputs=len(prog.run_fills), n_outputs=prog.n_outputs,
         fills=prog.run_fills, pad_safe=prog.pad_safe,
+        source=source, n_rewrites=rewritten.n_applied,
     )
 
 

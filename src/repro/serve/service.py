@@ -97,6 +97,10 @@ class Service:
         self.faults = faults if faults is not None else F.from_env()
         self.metrics = ServeMetrics()
         self.cache = CompiledProgramCache(cache_capacity)
+        # source graphs seen per compiled-program identity, so the
+        # ``programs_shared`` counter can spot distinct operators whose
+        # (rewritten) run phases land on one compiled program
+        self._program_sources: dict = {}
         self.executor = Executor(self.metrics, depth=pipeline_depth,
                                  clock=clock, faults=self.faults,
                                  max_retries=max_retries,
@@ -135,6 +139,8 @@ class Service:
                 "request load-shed; retry later or raise max_queue"
             )
         info = registry.request_info(op, canon)
+        if info.n_rewrites:
+            self.metrics.count("rewrites_applied", info.n_rewrites)
 
         if self.faults.should_fire("deadline"):
             deadline_ms = self.faults.value("deadline", 0.0)
@@ -299,6 +305,12 @@ class Service:
                 self.backend,
                 max_chunks=None if budget is None else int(budget),
             )
+            if info.source is not None:
+                seen = self._program_sources.setdefault(exe.key, set())
+                if info.source not in seen:
+                    if seen:
+                        self.metrics.count("programs_shared")
+                    seen.add(info.source)
             return exe.key, exe
         return (info.sig, (n_slots, *key.hw), key.dtype, self.backend), None
 

@@ -184,14 +184,22 @@ def test_asf_fuses_fewer_roundtrips():
     assert fused["fused_chain_len"] == OPS.asf_chain_length(s)
 
 
-def test_obr_is_single_padded_program():
-    """Opening-by-reconstruction: erosion chain + reconstruction share
-    one pad/crop (no intermediate crop/re-pad between the stages)."""
-    st = api.compile(api.opening_by_reconstruction_expr(4), (64, 96),
-                     np.uint8, "pallas").stats()
-    assert st["pads"] == 1 and st["crops"] == 1
+def test_obr_specializes_per_segment_plans():
+    """Opening-by-reconstruction mixes a fixed chain with a convergent
+    reconstruction: by default compile specializes one plan per segment
+    group (a re-band boundary between them); ``specialize=False``
+    restores the single shared-plan program (one pad, one crop)."""
+    expr = api.opening_by_reconstruction_expr(4)
+    st = api.compile(expr, (64, 96), np.uint8, "pallas").stats()
+    assert st["plans"] == 2 and st["rebands"] == 1
     assert st["launches"] == 2  # chain + reconstruct
-    prog = lower(api.opening_by_reconstruction_expr(4))
+    # re-band boundary: chain output crops, marker/mask re-pad (3 pads)
+    assert st["pads"] == 3 and st["crops"] == 2
+    single = api.compile(expr, (64, 96), np.uint8, "pallas",
+                         specialize=False).stats()
+    assert single["plans"] == 1 and single["rebands"] == 0
+    assert single["pads"] == 1 and single["crops"] == 1
+    prog = lower(expr)
     assert [s.kind for s in prog.kernel_segments] == ["chain", "reconstruct"]
 
 

@@ -42,6 +42,7 @@ def _doc_ids():
 def test_docs_exist():
     assert (REPO / "docs" / "ARCHITECTURE.md").is_file()
     assert (REPO / "docs" / "BENCHMARKS.md").is_file()
+    assert (REPO / "docs" / "OPTIMIZER.md").is_file()
     assert (REPO / "README.md").is_file()
 
 

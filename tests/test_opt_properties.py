@@ -1,0 +1,59 @@
+"""Hypothesis property test for the expression optimizer: for random
+redundancy-rich graphs ``g``, ``execute(rewrite(g)) == execute(g)``
+bit-for-bit — the whole-catalog soundness property every individual
+rule test in ``tests/test_opt.py`` is a special case of.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro import api
+from repro.api import E
+from repro.opt import rewrite
+
+pytestmark = pytest.mark.pipeline
+
+imgs = arrays(np.uint8, st.tuples(st.integers(6, 20), st.integers(6, 20)),
+              elements=st.integers(0, 255))
+
+
+@st.composite
+def graphs(draw, depth=3):
+    """Random expression graphs biased toward catalog redundancies
+    (zero-length chains, stacked openings, re-reconstructions)."""
+    node = E.input("f")
+    for _ in range(draw(st.integers(1, depth))):
+        choice = draw(st.integers(0, 5))
+        s = draw(st.integers(0, 3))
+        if choice == 0:
+            node = E.erode(s, node)
+        elif choice == 1:
+            node = E.dilate(s, node)
+        elif choice == 2:
+            node = E.opening(max(1, s), node)
+        elif choice == 3:
+            node = E.closing(max(1, s), node)
+        elif choice == 4:
+            node = E.reconstruct(node, E.input("f"), op="dilate")
+        else:
+            node = E.sat_sub(node, draw(st.integers(0, 60)))
+    return node
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs(), imgs)
+def test_rewrite_preserves_semantics(expr, img):
+    rewritten = rewrite(expr)
+    a = api.compile(expr, img.shape, img.dtype, "xla",
+                    rewrite=False)(jnp.asarray(img))
+    b = api.compile(rewritten, img.shape, img.dtype, "xla",
+                    rewrite=False)(jnp.asarray(img))
+    a = a if isinstance(a, tuple) else (a,)
+    b = b if isinstance(b, tuple) else (b,)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -316,6 +316,31 @@ def test_dispatch_failure_resolves_tickets(rng):
         _REGISTRY.pop("_boom_test", None)
 
 
+def test_optimizer_counters(rng):
+    """The optimizer counters: ``rewrites_applied`` counts rule
+    applications behind admitted requests (ASF's adjacent dilate
+    chains merge), ``programs_shared`` fires when a distinct source
+    graph joins an already-compiled program identity (HMAX and DOME
+    are one dilate-reconstruction)."""
+    svc = Service(backend="xla", max_batch=1, max_delay_ms=1e9,
+                  pad_quantum=16, clock=FakeClock())
+    f = _image(rng, (24, 24), np.uint8)
+    t = svc.submit("asf", f, params={"s": 1})
+    svc.flush()
+    np.testing.assert_array_equal(
+        np.asarray(t.result()),
+        np.asarray(_direct("asf", (f,), {"s": 1})))
+    counters = svc.stats()["counters"]
+    assert counters["rewrites_applied"] >= 1
+    assert counters["programs_shared"] == 0
+    t1 = svc.submit("hmax", f, params={"h": 40})
+    svc.flush()
+    t2 = svc.submit("dome", f, params={"h": 40})
+    svc.flush()
+    assert t1.done and t2.done
+    assert svc.stats()["counters"]["programs_shared"] == 1
+
+
 # ---------------------------------------------------------------------------
 # registry: schema-as-data validation
 # ---------------------------------------------------------------------------
