@@ -33,6 +33,7 @@ identical run phases (HMAX vs DOME) share one compiled bucket program.
 from __future__ import annotations
 
 import functools
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +54,48 @@ _NEED_FILL = {"erode": "hi", "dilate": "lo"}
 
 def _fill_value(fill: str, dtype):
     return ident_for(_FILL_OP[fill], dtype)
+
+
+class SlotSession(NamedTuple):
+    """Jitted entry points for continuous batching over one resident
+    device-state *session* (see :meth:`Executable.slot_session`).
+
+    The session owns a persistent padded stack whose ``n_slots`` row
+    blocks are independent images under the requeue scheduler; slots
+    park (activity cleared → zero work) and are re-armed in place.
+    All callables are pure: they take the session state and return the
+    next one.
+
+    ``init()``
+        fresh state: every slot parked, planes filled with the
+        program's absorbing pad identities.
+    ``admit(state, slot, *canonical) -> state``
+        write one request's canonical (H, W) inputs into ``slot``'s
+        row block (padded with the program's fills), re-arm its
+        activity rows, and zero its chunk counter — exactly the
+        initial condition a solo run of that image starts from.
+    ``round(state) -> (state, finished, exhausted)``
+        run at most ``n_chunks`` scheduler chunks over every active
+        slot.  ``finished`` is (n_slots,) bool — the slot's active set
+        is empty (converged, budget-truncated, or parked); a finished
+        *occupied* slot is ready to harvest and refill.  ``exhausted``
+        flags slots cut off by the per-image chunk budget (degraded
+        partial fixpoints).
+    ``extract(state) -> outputs``
+        cropped (n_slots, H, W) run outputs (program output order).
+    ``chunks_of(state) -> (n_slots,) int32``
+        cumulative scheduler chunks each slot's image has consumed —
+        the raw material for chunk-weighted work-occupancy accounting
+        (round-over-round deltas are what a slot actually did).
+    """
+
+    n_slots: int
+    n_chunks: int
+    init: Any
+    admit: Any
+    round: Any
+    extract: Any
+    chunks_of: Any
 
 
 def _seg_need_fill(seg) -> str:
@@ -99,6 +142,7 @@ class Executable:
         self.seg_plans = tuple(seg_plans) if seg_plans else None
         self.rewrite_trace = tuple(rewrite_trace)
         self._mask_cache: dict = {}
+        self._sessions: dict = {}
         if plan is not None:
             self._max_chunks_rec = self._budget_rec(plan)
             self._max_chunks_qdt = self._budget_qdt(plan)
@@ -146,15 +190,170 @@ class Executable:
         return self._run_fn(*canonical)
 
     def run_batch_stats(self, *canonical):
-        """Run phase plus the convergence watchdog's verdict:
-        ``(outputs, converged)`` where ``converged`` is a (N,) bool
-        vector, False for images whose convergence-driven segments
-        exhausted the chunk budget (``ReconstructStats.converged``
-        per image, AND-ed across segments).  The serve executor demuxes
-        it into per-request degraded flags; programs without convergent
-        segments (and the jnp oracle engine, which iterates to its own
-        fixpoint) report all-True."""
+        """Run phase plus the convergence watchdog's verdict and chunk
+        utilization: ``(outputs, converged, busy_chunks, cap_chunks)``.
+        ``converged`` is a (N,) bool vector, False for images whose
+        convergence-driven segments exhausted the chunk budget
+        (``ReconstructStats.converged`` per image, AND-ed across
+        segments).  The serve executor demuxes it into per-request
+        degraded flags; programs without convergent segments (and the
+        jnp oracle engine, which iterates to its own fixpoint) report
+        all-True.  ``busy_chunks``/``cap_chunks`` are int32 scalars:
+        scheduler chunks the images actually consumed vs the chunks the
+        batch held every slot for (summed across convergence-driven
+        segments; both 0 when there are none) — the serving layer's
+        chunk-weighted work-occupancy accounting, which exposes the
+        dead capacity of early-converged slots parked behind a
+        straggler."""
         return self._run_stats_fn(*canonical)
+
+    @property
+    def refillable(self) -> bool:
+        """True when this program can run as a continuous-batching slot
+        session: a single convergence-driven segment (reconstruct/QDT)
+        under one pallas plan, compiled for a 3-D batch.  Fixed-length
+        chains gain nothing from refill (no stragglers to wait behind),
+        and multi-segment/specialized programs re-band between plans,
+        which has no per-slot resumable state."""
+        prog = self.program
+        return (self.plan is not None
+                and self.seg_plans is None
+                and not self.was_2d
+                and len(prog.segments) == 1
+                and prog.segments[0].kind in ("reconstruct", "qdt"))
+
+    def slot_session(self, n_chunks: int) -> SlotSession:
+        """Build (or fetch) the :class:`SlotSession` entry points for
+        continuous batching with rounds of ``n_chunks`` scheduler
+        chunks.  Requires :attr:`refillable`.
+
+        Bit-exactness: a slot admitted mid-flight starts from exactly
+        the state a fresh solo batch would stage for it (same absorbing
+        pads, all-active rows, zero chunk counter), and the scheduler's
+        per-image independence (image-pinned halos + inactive-cell
+        skip) means later rounds apply the same chunk sequence a solo
+        run would — so harvested outputs equal solo execution bit for
+        bit.  Budget-truncated slots are flagged exhausted and match a
+        solo run under ``max_chunks=budget`` (see ``_drive_scheduler``).
+        """
+        cached = self._sessions.get(n_chunks)
+        if cached is not None:
+            return cached
+        if not self.refillable:
+            raise ValueError(
+                f"{self!r} is not refillable (continuous batching needs a "
+                "single convergent segment on the pallas backend)")
+        if n_chunks < 1:
+            raise ValueError("n_chunks must be >= 1")
+        from repro.kernels.common import qdt_acc_dtype
+        from repro.kernels.ops import (_crop3, _scheduled_qdt,
+                                       _scheduled_reconstruct)
+
+        prog = self.program
+        seg = prog.segments[0]
+        plan = self.plan
+        n, h, w = self.n_images, self.height, self.width
+        hp, wp = plan.height_pad, plan.width_pad
+        fills = dict(self._exec_groups[0][2])  # slot -> pad fill name
+
+        def plane(fill: str, dtype):
+            return jnp.full((n * hp, wp), _fill_value(fill, dtype), dtype)
+
+        def write(p, slot, img, fill: str):
+            tile = jnp.pad(img, ((0, hp - h), (0, wp - w)),
+                           constant_values=_fill_value(fill, img.dtype))
+            return jax.lax.dynamic_update_slice(p, tile, (slot * hp, 0))
+
+        def zero_rows(p, slot):
+            return jax.lax.dynamic_update_slice(
+                p, jnp.zeros((hp, wp), p.dtype), (slot * hp, 0))
+
+        def arm(sched, slot):
+            active, chunks, exhausted = sched
+            active = jax.lax.dynamic_update_slice(
+                active, jnp.ones((plan.n_bands, plan.n_tiles), jnp.int32),
+                (slot * plan.n_bands, 0))
+            chunks = jax.lax.dynamic_update_slice(
+                chunks, jnp.zeros((1,), jnp.int32), (slot,))
+            exhausted = jax.lax.dynamic_update_slice(
+                exhausted, jnp.zeros((1,), jnp.bool_), (slot,))
+            return active, chunks, exhausted
+
+        def sched0():
+            # all slots parked: no active cells, nothing costs work
+            return (jnp.zeros((plan.total_bands, plan.n_tiles), jnp.int32),
+                    jnp.zeros((n,), jnp.int32),
+                    jnp.zeros((n,), jnp.bool_))
+
+        def crops(vals: dict):
+            return tuple(_crop3(vals[s], n, h, w)
+                         for s in prog.run_outputs)
+
+        if seg.kind == "reconstruct":
+            op = seg.param("op")
+            budget = self._budget_rec(plan)
+            f_slot, m_slot = seg.srcs
+
+            def init():
+                return (plane(fills[f_slot], self.dtype),
+                        plane(fills[m_slot], self.dtype), *sched0())
+
+            def admit(state, slot, marker, mask):
+                fp, mp, *sched = state
+                fp = write(fp, slot, marker, fills[f_slot])
+                mp = write(mp, slot, mask, fills[m_slot])
+                return (fp, mp, *arm(tuple(sched), slot))
+
+            def round_(state):
+                fp, mp, *sched = state
+                fp, _, _, _, finished, sched = _scheduled_reconstruct(
+                    fp, mp, plan, op, n_chunks, False,
+                    resume=tuple(sched), budget=budget)
+                return (fp, mp, *sched), finished, sched[2]
+
+            def extract(state):
+                return crops({seg.dsts[0]: state[0]})
+
+            def chunks_of(state):
+                return state[3]
+
+        else:  # qdt
+            budget = self._budget_qdt(plan)
+            x_slot = seg.srcs[0]
+            acc = qdt_acc_dtype(self.dtype)
+
+            def init():
+                return (plane(fills[x_slot], self.dtype),
+                        jnp.zeros((n * hp, wp), acc),
+                        jnp.zeros((n * hp, wp), jnp.int32), *sched0())
+
+            def admit(state, slot, f):
+                x, r, d, *sched = state
+                x = write(x, slot, f, fills[x_slot])
+                r = zero_rows(r, slot)
+                d = zero_rows(d, slot)
+                return (x, r, d, *arm(tuple(sched), slot))
+
+            def round_(state):
+                x, r, d, *sched = state
+                x, r, d, finished, sched = _scheduled_qdt(
+                    x, plan, n_chunks, rp=r, dp=d,
+                    resume=tuple(sched), budget=budget)
+                return (x, r, d, *sched), finished, sched[2]
+
+            def extract(state):
+                return crops({seg.dsts[0]: state[2], seg.dsts[1]: state[1]})
+
+            def chunks_of(state):
+                return state[4]
+
+        session = SlotSession(
+            n_slots=n, n_chunks=n_chunks, init=jax.jit(init),
+            admit=jax.jit(admit), round=jax.jit(round_),
+            extract=jax.jit(extract), chunks_of=chunks_of,
+        )
+        self._sessions[n_chunks] = session
+        return session
 
     @property
     def all_plans(self) -> tuple:
@@ -259,16 +458,23 @@ class Executable:
         return self._run_padded(canonical)
 
     def _run_segments_stats(self, *canonical):
-        """Run phase + (N,) convergence vector (see run_batch_stats)."""
+        """Run phase + (N,) convergence vector + chunk utilization
+        (see run_batch_stats)."""
         all_ok = jnp.ones((self.n_images,), jnp.bool_)
+        zero = jnp.zeros((), jnp.int32)
         if self.plan is None:
             # the jnp oracle bodies iterate to their own fixpoint
-            return self._run_xla(canonical), all_ok
+            return self._run_xla(canonical), all_ok, zero, zero
         conv: list = []
-        outs = self._run_padded(canonical, conv)
+        util: list = []
+        outs = self._run_padded(canonical, conv, util)
         for vec in conv:
             all_ok = jnp.logical_and(all_ok, vec)
-        return outs, all_ok
+        busy, cap = zero, zero
+        for b, c in util:
+            busy = busy + b
+            cap = cap + c
+        return outs, all_ok, busy, cap
 
     # -- xla engine: the jnp oracle bodies, unpadded -----------------------
 
@@ -363,7 +569,8 @@ class Executable:
             self._mask_cache[plan.key] = mask
         return mask
 
-    def _run_padded(self, canonical, conv: list | None = None):
+    def _run_padded(self, canonical, conv: list | None = None,
+                    util: list | None = None):
         from repro.kernels.ops import _crop3, _pad, _stacked
 
         prog = self.program
@@ -378,14 +585,16 @@ class Executable:
                 vals2[s] = _stacked(_pad(x3, plan,
                                          _fill_value(fill, x3.dtype)))
             for i in idxs:
-                self._pallas_seg(prog.segments[i], vals2, plan, conv)
+                self._pallas_seg(prog.segments[i], vals2, plan, conv,
+                                 util)
             for d in crops:
                 vals3[d] = _crop3(vals2[d], self.n_images, self.height,
                                   self.width)
         outs = tuple(vals3[s] for s in prog.run_outputs)
         return tuple(o[0] if self.was_2d else o for o in outs)
 
-    def _pallas_seg(self, seg, vals, plan, conv: list | None = None):
+    def _pallas_seg(self, seg, vals, plan, conv: list | None = None,
+                    util: list | None = None):
         from repro.kernels.ops import _scheduled_qdt, _scheduled_reconstruct
 
         if seg.kind == "refill":
@@ -402,19 +611,28 @@ class Executable:
                 vals[seg.srcs[0]], vals[seg.srcs[1]],
                 seg.param("op"), seg.param("n"), plan)
         elif seg.kind == "reconstruct":
-            out, _, _, _, img_conv = _scheduled_reconstruct(
+            out, it, _, _, img_conv, state = _scheduled_reconstruct(
                 vals[seg.srcs[0]], vals[seg.srcs[1]], plan,
                 seg.param("op"), self._budget_rec(plan), False,
             )
             vals[seg.dsts[0]] = out
             if conv is not None:
                 conv.append(img_conv)
+            if util is not None:
+                # busy = chunks each image actually consumed; capacity =
+                # chunks the batch held every slot for (chunk-weighted
+                # work occupancy — parked converged slots are waste)
+                util.append((jnp.sum(state[1]),
+                             it * jnp.int32(plan.n_images)))
         elif seg.kind == "qdt":
-            _, r, d, img_conv = _scheduled_qdt(vals[seg.srcs[0]], plan,
-                                               self._budget_qdt(plan))
+            _, r, d, img_conv, state = _scheduled_qdt(
+                vals[seg.srcs[0]], plan, self._budget_qdt(plan))
             vals[seg.dsts[0]], vals[seg.dsts[1]] = d, r
             if conv is not None:
                 conv.append(img_conv)
+            if util is not None:
+                util.append((jnp.sum(state[1]),
+                             jnp.max(state[1]) * jnp.int32(plan.n_images)))
         else:  # pragma: no cover
             raise AssertionError(seg.kind)
 

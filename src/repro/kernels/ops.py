@@ -439,6 +439,19 @@ def geodesic_chain(
     return _crop(_unstacked(fp, f3.shape[0]), f.shape, was_2d)
 
 
+def scheduler_state0(plan: ChainPlan):
+    """Fresh resumable scheduler state for :func:`_drive_scheduler`:
+    ``(active, img_chunks, exhausted)`` with every cell active and no
+    chunks applied.  A state with ``active`` all-zero (see
+    ``Executable.slot_session``) describes a stack of parked slots that
+    cost no work until a slot's rows are re-activated."""
+    return (
+        jnp.ones((plan.total_bands, plan.n_tiles), jnp.int32),
+        jnp.zeros((plan.n_images,), jnp.int32),
+        jnp.zeros((plan.n_images,), jnp.bool_),
+    )
+
+
 def _drive_scheduler(
     plan: ChainPlan,
     data,
@@ -448,6 +461,8 @@ def _drive_scheduler(
     gather_const=None,
     max_chunks: int,
     with_stats: bool = False,
+    resume=None,
+    budget: int | None = None,
 ):
     """Shared active-cell requeue driver loop (the paper's Alg. 4 work
     queue).  One loop serves every convergence-driven chain —
@@ -478,17 +493,38 @@ def _drive_scheduler(
         cells does not re-gather the mask every chunk.
 
     Returns (data, chunks, active_cell_sum, active_per_chunk,
-    img_converged).  ``img_converged`` is the convergence watchdog's
-    per-image verdict — a (n_images,) bool vector, True where the
-    image's cells all went inactive *within the chunk budget*.  The
-    loop already refuses to spin (``it < max_chunks`` in the cond);
-    the vector is what turns a budget exhaustion from a silent partial
-    result into a typed, per-image signal that
+    img_converged, state).  ``img_converged`` is the convergence
+    watchdog's per-image verdict — a (n_images,) bool vector, True
+    where the image's cells all went inactive *within the chunk
+    budget*.  The loop already refuses to spin (``it < max_chunks`` in
+    the cond); the vector is what turns a budget exhaustion from a
+    silent partial result into a typed, per-image signal that
     ``reconstruct_with_stats`` (``ReconstructStats.converged``) and the
     serving layer's degraded-mode demux surface.  The per-chunk trace
     is only carried through the loop when ``with_stats`` — it is a
     max_chunks-sized array updated by scatter every chunk, which the
     plain paths must not pay for (XLA cannot DCE loop-carried state).
+
+    **Resumable rounds** (the continuous-batching seam): ``resume``
+    accepts a previously returned ``state = (active, img_chunks,
+    exhausted)`` so the loop can run a *bounded round* of at most
+    ``max_chunks`` chunks and be re-entered later exactly where it
+    stopped — per-image chunk counters (and therefore the QDT distance
+    base offsets, ``img_chunks * fuse_k``) carry across rounds.
+    Because every kernel pins its halo at image boundaries
+    (``bands_per_image``) and inactive cells are skipped, an image's
+    chunk sequence depends only on its own activity rows: re-arming
+    one slot's rows from a parked state replays exactly the chunk
+    sequence a solo run of that image would take, which is what makes
+    mid-flight slot refill bit-exact.
+
+    ``budget`` (used with ``resume``) bounds the *per-image* chunk
+    count across rounds: an image that reaches ``budget`` applied
+    chunks while still active has its cells force-cleared — precisely
+    the truncation a solo run under ``max_chunks=budget`` performs —
+    and is flagged in ``state.exhausted`` so the caller can deliver it
+    as a degraded partial fixpoint rather than mistaking the cleared
+    activity for convergence.
     """
     total = plan.total_tiles
     cap = plan.compact_capacity
@@ -515,7 +551,8 @@ def _drive_scheduler(
         return jnp.logical_and(jnp.any(active > 0), it < max_chunks)
 
     def body(state):
-        data, active, it, img_chunks, asum, per_chunk, ckey, cval = state
+        (data, active, it, img_chunks, asum, per_chunk, ckey, cval,
+         exhausted) = state
         count = jnp.sum(active)
         base = jnp.repeat(img_chunks * plan.fuse_k, plan.n_bands)[:, None]
 
@@ -542,41 +579,62 @@ def _drive_scheduler(
             data, flags, ckey, cval = do_full(data, ckey, cval)
         if with_stats:
             per_chunk = per_chunk.at[it].set(count)
+        next_active = _dilate_active(flags, plan)
+        next_chunks = img_chunks + img_active(active).astype(jnp.int32)
+        if budget is not None:
+            # per-image budget truncation: an image at its chunk budget
+            # stops receiving chunks — bit-exact with a solo run under
+            # max_chunks=budget — and is flagged exhausted iff it was
+            # cut off while still active (vs converging right at it).
+            over = next_chunks >= budget
+            exhausted = jnp.logical_or(
+                exhausted, jnp.logical_and(over, img_active(next_active)))
+            next_active = jnp.where(
+                jnp.repeat(over, plan.n_bands)[:, None], 0, next_active)
         return (
             data,
-            _dilate_active(flags, plan),
+            next_active,
             it + 1,
-            img_chunks + img_active(active).astype(jnp.int32),
+            next_chunks,
             asum + count,
             per_chunk,
             ckey,
             cval,
+            exhausted,
         )
 
+    active0, img_chunks0, exhausted0 = (
+        resume if resume is not None else scheduler_state0(plan))
     init = (
         data,
-        jnp.ones((plan.total_bands, plan.n_tiles), jnp.int32),
+        active0,
         jnp.asarray(0, jnp.int32),
-        jnp.zeros((plan.n_images,), jnp.int32),
+        img_chunks0,
         jnp.asarray(0, jnp.int32),
         jnp.zeros((max_chunks if with_stats else 0,), jnp.int32),
         key0,
         val0,
+        exhausted0,
     )
-    data, active, it, _, asum, per_chunk, _, _ = jax.lax.while_loop(
-        cond, body, init)
+    (data, active, it, img_chunks, asum, per_chunk, _, _,
+     exhausted) = jax.lax.while_loop(cond, body, init)
     img_converged = jnp.logical_not(img_active(active))
-    return data, it, asum, per_chunk, img_converged
+    return (data, it, asum, per_chunk, img_converged,
+            (active, img_chunks, exhausted))
 
 
 def _scheduled_reconstruct(fp, mp, plan: ChainPlan, op: str, max_chunks: int,
-                           with_stats: bool):
+                           with_stats: bool, resume=None,
+                           budget: int | None = None):
     """Reconstruction's step functions for :func:`_drive_scheduler`.
 
     ``fp``/``mp`` are stacked (TOTAL_H, W_pad) arrays.  The mask is
     chunk-invariant, so its compact-workspace gather goes through the
     driver's ``gather_const`` cache.  Tiled plans run the 2-D grid
     kernel for full chunks; compaction is patch-based either way.
+    ``resume``/``budget`` pass through to the driver (the
+    continuous-batching slot-refill entry — see
+    ``Executable.slot_session``).
     """
     ident = ident_for(op, fp.dtype)
 
@@ -608,7 +666,7 @@ def _scheduled_reconstruct(fp, mp, plan: ChainPlan, op: str, max_chunks: int,
     return _drive_scheduler(
         plan, fp, full_step=full_step, compact_step=compact_step,
         gather_const=gather_const, max_chunks=max_chunks,
-        with_stats=with_stats,
+        with_stats=with_stats, resume=resume, budget=budget,
     )
 
 
@@ -635,7 +693,7 @@ def _reconstruct_impl(f, m, op, backend, max_chunks, plan, with_stats=False):
     fp = _stacked(_pad(f3, plan, ident))
     mp = _stacked(_pad(m3, plan, ident))
 
-    out, chunks, asum, per_chunk, img_conv = _scheduled_reconstruct(
+    out, chunks, asum, per_chunk, img_conv, _ = _scheduled_reconstruct(
         fp, mp, plan, op, max_chunks, with_stats
     )
     stats = ReconstructStats(
@@ -717,20 +775,27 @@ def reconstruct_with_stats(
 # ---------------------------------------------------------------------------
 
 
-def _scheduled_qdt(fp, plan: ChainPlan, max_chunks: int):
+def _scheduled_qdt(fp, plan: ChainPlan, max_chunks: int, rp=None, dp=None,
+                   resume=None, budget: int | None = None):
     """QDT's step functions for :func:`_drive_scheduler`.
 
     ``fp`` is the stacked (TOTAL_H, W_pad) image, padded with the
     erosion identity.  Returns the final (eroded, residual, distance)
-    stacked planes plus the watchdog's per-image convergence vector;
-    the residual accumulator dtype follows the paper's convention
-    (float32 for float images, int32 otherwise).
+    stacked planes plus the watchdog's per-image convergence vector and
+    the resumable scheduler state; the residual accumulator dtype
+    follows the paper's convention (float32 for float images, int32
+    otherwise).  ``rp``/``dp`` accept mid-flight residual/distance
+    planes (with ``resume``/``budget``) for bounded continuous-batching
+    rounds — the per-image chunk counters in the resumed state keep the
+    distance base offsets consistent across rounds.
     """
     k = plan.fuse_k
     acc = qdt_acc_dtype(fp.dtype)
     ident = ident_for("erode", fp.dtype)
-    rp = jnp.zeros(fp.shape, acc)
-    dp = jnp.zeros(fp.shape, jnp.int32)
+    if rp is None:
+        rp = jnp.zeros(fp.shape, acc)
+    if dp is None:
+        dp = jnp.zeros(fp.shape, jnp.int32)
 
     def full_step(data, active, base):
         x, r, d = data
@@ -769,11 +834,11 @@ def _scheduled_qdt(fp, plan: ChainPlan, max_chunks: int):
         d = _scatter_mid(d, idx, d2, plan)
         return (x, r, d), _scatter_flags(ch, idx, plan)
 
-    (x, r, d), _, _, _, img_conv = _drive_scheduler(
+    (x, r, d), _, _, _, img_conv, state = _drive_scheduler(
         plan, (fp, rp, dp), full_step=full_step, compact_step=compact_step,
-        max_chunks=max_chunks,
+        max_chunks=max_chunks, resume=resume, budget=budget,
     )
-    return x, r, d, img_conv
+    return x, r, d, img_conv, state
 
 
 def qdt_planes(

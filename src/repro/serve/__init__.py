@@ -73,25 +73,48 @@ Fault-tolerant lifecycle (PR 7, full contract in ``docs/ROBUSTNESS.md``)
     seeded via ``REPRO_FAULTS``) driving the chaos suite and the CI
     ``chaos`` job through the named sites
     dispatch/drain/poison/deadline/budget.
+
+Event-driven engine (PR 9)
+--------------------------
+
+``loop``
+    the deterministic timer core: :class:`EventLoop` (a pumped
+    ``(when, seq)``-ordered callback heap on an injectable clock) and
+    :class:`VirtualClock` — the seam that makes every flush, expiry,
+    refill and backpressure decision replayable in tests
+    (``tests/serve_sim.py``).
+``continuous``
+    continuous batching: :class:`SlotEngine` keeps a resident
+    :class:`~repro.api.executable.SlotSession` per refillable bucket
+    and refills slots the moment their image converges, while
+    stragglers keep iterating (``Service(continuous=True)``).
+``service.AsyncService``
+    the asyncio front-end — service timers trampolined onto the
+    running asyncio loop so deadline flushes fire with no caller, and
+    tickets awaitable as futures.
 """
 from repro.serve import errors, faults, registry
 from repro.serve.bucketer import BucketKey, Ticket, bucket_hw, canonical_batch
 from repro.serve.cache import CacheEntry, CompiledProgramCache
+from repro.serve.continuous import SlotEngine
 from repro.serve.errors import (DeadlineExceededError, ExecutorError,
                                 InvalidRequestError, NonFiniteInputError,
                                 PoisonedRequestError, QueueFullError,
                                 RequestRejected, ServeError,
-                                UnsupportedDtypeError)
+                                ServiceClosedError, UnsupportedDtypeError)
 from repro.serve.executor import Executor
 from repro.serve.faults import FaultInjector, FaultSpec, InjectedFault
+from repro.serve.loop import EventLoop, VirtualClock
 from repro.serve.metrics import ServeMetrics
-from repro.serve.service import Service, serve_stream
+from repro.serve.service import AsyncService, Service, serve_stream
 
 __all__ = [
+    "AsyncService",
     "BucketKey",
     "CacheEntry",
     "CompiledProgramCache",
     "DeadlineExceededError",
+    "EventLoop",
     "Executor",
     "ExecutorError",
     "FaultInjector",
@@ -105,8 +128,11 @@ __all__ = [
     "ServeError",
     "ServeMetrics",
     "Service",
+    "ServiceClosedError",
+    "SlotEngine",
     "Ticket",
     "UnsupportedDtypeError",
+    "VirtualClock",
     "bucket_hw",
     "canonical_batch",
     "errors",

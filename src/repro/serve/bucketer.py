@@ -124,6 +124,31 @@ class Ticket:
     _service: Any = dataclasses.field(default=None, repr=False)
     _bucket_key: Any = dataclasses.field(default=None, repr=False)
     _queued: bool = dataclasses.field(default=False, repr=False)
+    _done_cbs: list = dataclasses.field(default_factory=list, repr=False)
+
+    def _fulfill(self, now: float) -> None:
+        """Mark the ticket done (exactly once) and fire completion
+        callbacks — the single terminal transition every lifecycle path
+        (demux, recovery, expiry, shed) goes through, which is what
+        lets the async front-end resolve futures and the property suite
+        assert exactly-one-terminal-outcome."""
+        if self.done:
+            return
+        self.done = True
+        self.t_done = now
+        cbs, self._done_cbs = list(self._done_cbs), []
+        for cb in cbs:
+            cb(self)
+
+    def add_done_callback(self, cb) -> None:
+        """Call ``cb(ticket)`` when the ticket reaches its terminal
+        outcome (immediately if already done).  Callbacks run on the
+        thread that completes the ticket — the single service thread
+        or the asyncio loop pumping it."""
+        if self.done:
+            cb(self)
+        else:
+            self._done_cbs.append(cb)
 
     def result(self):
         """The request's output; drives the service forward if needed."""
@@ -165,6 +190,7 @@ class PendingRequest:
     info: Any = None        # registry.RunInfo (staging/bucket identity)
     finalize: Any = None    # (outputs, images) -> outputs, or None
     poisoned: bool = False  # fault harness: this request kills its batch
+    timer: Any = None       # armed expiry TimerHandle, cancelled at launch
 
 
 class BucketQueue:
@@ -181,15 +207,39 @@ class BucketQueue:
         q.append(req)
         return len(q) >= self.max_batch
 
-    def pop(self, key: BucketKey) -> list[PendingRequest]:
-        """Dequeue up to ``max_batch`` oldest requests of a bucket."""
+    def pop(self, key: BucketKey,
+            limit: int | None = None) -> list[PendingRequest]:
+        """Dequeue up to ``limit`` (default ``max_batch``) oldest
+        requests of a bucket."""
+        cap = self.max_batch if limit is None else limit
         q = self._queues.get(key, [])
-        batch, rest = q[: self.max_batch], q[self.max_batch :]
+        batch, rest = q[:cap], q[cap:]
         if rest:
             self._queues[key] = rest
         else:
             self._queues.pop(key, None)
         return batch
+
+    def size(self, key: BucketKey) -> int:
+        return len(self._queues.get(key, ()))
+
+    def oldest(self, key: BucketKey) -> PendingRequest | None:
+        q = self._queues.get(key)
+        return q[0] if q else None
+
+    def discard(self, key: BucketKey, req: PendingRequest) -> bool:
+        """Remove one specific queued request (deadline expiry firing
+        from a timer while the request still sits in its bucket)."""
+        q = self._queues.get(key)
+        if not q:
+            return False
+        try:
+            q.remove(req)
+        except ValueError:
+            return False
+        if not q:
+            self._queues.pop(key, None)
+        return True
 
     def due(self, now: float) -> list[BucketKey]:
         """Buckets whose oldest request has exceeded the flush deadline."""

@@ -29,6 +29,10 @@ class CacheEntry(NamedTuple):
     #: (``Executable.run_batch_stats``); None for custom OpSpecs, whose
     #: hand-written run exposes no convergence watchdog.
     stats_fn: Any = None
+    #: the underlying ``api.Executable`` for expression ops — the
+    #: continuous engine asks it for a ``slot_session`` (refillable
+    #: resumable scheduler); None for custom OpSpecs.
+    exe: Any = None
 
     def primary(self):
         """The callable the executor dispatches (and warmup executes):

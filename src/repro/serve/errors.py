@@ -87,6 +87,14 @@ class QueueFullError(ServeError):
     code = "shed"
 
 
+class ServiceClosedError(ServeError):
+    """The service was closed (``Service.close()`` /
+    ``AsyncService.close()``); no new requests are admitted.  Requests
+    already admitted at close time still drain to a terminal outcome."""
+
+    code = "closed"
+
+
 class DeadlineExceededError(ServeError):
     """The request's deadline expired before its bucket dispatched."""
 

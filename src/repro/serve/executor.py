@@ -66,6 +66,7 @@ class InflightBatch(NamedTuple):
     n_slots: int
     t_dispatch: float
     runner: Any              # sync re-execution closure (recovery ladder)
+    util: Any = None         # (busy, cap) chunk-utilization scalars, or None
 
 
 class Executor:
@@ -99,25 +100,28 @@ class Executor:
         pipeline is full.  Never raises: a trace/compile failure at the
         call enters the recovery ladder instead."""
         try:
-            outputs, conv = self._call_entry(entry, stacked_inputs)
+            outputs, conv, util = self._call_entry(entry, stacked_inputs)
         except Exception as exc:
             self.recover(key, requests, runner, exc)
             return
         self._inflight.append(InflightBatch(
             outputs=outputs, converged=conv, requests=requests, key=key,
             n_slots=n_slots, t_dispatch=self.clock(), runner=runner,
+            util=util,
         ))
         while len(self._inflight) > self.depth:
             self.drain_one()
 
     @staticmethod
     def _call_entry(entry, stacked_inputs):
-        """Run a cache entry's primary callable → (outputs, conv|None)."""
+        """Run a cache entry's primary callable →
+        ``(outputs, conv|None, util|None)`` where ``util`` is the
+        ``(busy_chunks, cap_chunks)`` pair of ``run_batch_stats``."""
         if entry.stats_fn is not None:
-            outputs, conv = entry.stats_fn(*stacked_inputs)
-            return outputs, conv
+            outputs, conv, busy, cap = entry.stats_fn(*stacked_inputs)
+            return outputs, conv, (busy, cap)
         out = entry.fn(*stacked_inputs)
-        return (out if isinstance(out, tuple) else (out,)), None
+        return (out if isinstance(out, tuple) else (out,)), None, None
 
     # -- drain + demux -----------------------------------------------------
 
@@ -128,12 +132,14 @@ class Executor:
         batch = self._inflight.popleft()
         try:
             self.faults.check("drain", batch.key.label())
-            jax.block_until_ready((batch.outputs, batch.converged))
+            jax.block_until_ready((batch.outputs, batch.converged,
+                                   batch.util))
         except Exception as exc:  # async execution error surfaces here
             self.recover(batch.key, batch.requests, batch.runner, exc)
             return True
         self._demux(batch.key, batch.requests, batch.n_slots,
-                    batch.outputs, batch.converged, batch.t_dispatch)
+                    batch.outputs, batch.converged, batch.t_dispatch,
+                    util=batch.util)
         return True
 
     def drain_all(self) -> None:
@@ -141,9 +147,10 @@ class Executor:
             pass
 
     def _demux(self, key: BucketKey, requests, n_slots: int, outputs,
-               converged, t_dispatch: float) -> None:
+               converged, t_dispatch: float, util=None) -> None:
         """Crop, finalize and deliver per-request results (shared by the
-        async drain path and the synchronous recovery re-runs)."""
+        async drain path, the continuous engine's harvest, and the
+        synchronous recovery re-runs)."""
         now = self.clock()
         conv = None if converged is None else np.asarray(converged)
         latencies = []
@@ -171,11 +178,12 @@ class Executor:
                     f"finalize failed for request {req.ticket.request_id} "
                     f"({req.ticket.op})", cause=exc)
                 n_errors += 1
-            req.ticket.done = True
-            req.ticket.t_done = now
+            req.ticket._fulfill(now)
             latencies.append(now - req.ticket.t_enqueue)
             pixels += h * w
 
+        busy, cap = ((int(util[0]), int(util[1])) if util is not None
+                     else (0, 0))
         self.metrics.record_batch(
             key.label(),
             n_real=len(requests),
@@ -186,6 +194,8 @@ class Executor:
             latencies_s=latencies,
             n_errors=n_errors,
             n_degraded=n_degraded,
+            busy_chunks=busy,
+            cap_chunks=cap,
         )
         return
 
@@ -230,8 +240,7 @@ class Executor:
                 f"request {req.ticket.request_id} ({req.ticket.op}) "
                 "poisoned its batch: every containing subset failed",
                 cause=cause)
-            req.ticket.done = True
-            req.ticket.t_done = self.clock()
+            req.ticket._fulfill(self.clock())
             self.metrics.count("poisoned")
             return
         mid = len(requests) // 2
@@ -249,5 +258,4 @@ class Executor:
         now = self.clock()
         for req in requests:
             req.ticket.error = exc
-            req.ticket.done = True
-            req.ticket.t_done = now
+            req.ticket._fulfill(now)

@@ -46,9 +46,45 @@ LATENCY_WINDOW = 4096
 #:   programs_shared   times a distinct source graph joined an
 #:                     already-compiled program identity (rewrite
 #:                     canonicalization or run-signature co-batching)
+#:   refills           requests admitted into a continuous-batching
+#:                     slot freed mid-flight (other slots still
+#:                     iterating) — the continuous-batching win counter
+#:   backpressure_flushes  eager bucket launches forced by the
+#:                     ``high_water`` backpressure watermark
+#:   quantum_splits    adaptive pad_quantum decisions that *shrank* a
+#:                     run signature's bucket quantum (splitting
+#:                     buckets to cut pad waste)
+#:   quantum_merges    adaptive pad_quantum decisions that *grew* it
+#:                     (merging sparse buckets to recover co-batching)
 COUNTERS = ("rejected", "shed", "expired", "retried", "poisoned",
             "degraded", "batch_failures", "quarantine_reruns",
-            "rewrites_applied", "programs_shared")
+            "rewrites_applied", "programs_shared", "refills",
+            "backpressure_flushes", "quantum_splits", "quantum_merges")
+
+
+#: Distinct request shapes tracked per run signature (oldest-seen kept:
+#: deterministic, bounded).
+TRAFFIC_SHAPES = 64
+
+
+@dataclasses.dataclass
+class TrafficStats:
+    """Per-run-signature arrival histogram driving the adaptive
+    ``pad_quantum``/bucket-split policy: how many requests arrived and
+    with which raw (H, W) shapes.  Deliberately tiny and deterministic
+    — a Counter over shapes, capped at :data:`TRAFFIC_SHAPES` distinct
+    entries — so the policy replays identically under the virtual
+    clock."""
+
+    arrivals: int = 0
+    shapes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+
+    def record(self, shape) -> None:
+        self.arrivals += 1
+        key = (int(shape[0]), int(shape[1]))
+        if key in self.shapes or len(self.shapes) < TRAFFIC_SHAPES:
+            self.shapes[key] += 1
 
 
 @dataclasses.dataclass
@@ -59,6 +95,11 @@ class _BucketStats:
     pixels: int = 0
     errors: int = 0
     degraded: int = 0
+    rounds: int = 0            # continuous-engine scheduler rounds
+    slot_rounds: int = 0       # rounds × engine slots (capacity)
+    busy_slot_rounds: int = 0  # slot-rounds spent on live requests
+    busy_chunks: int = 0       # scheduler chunks spent on live images
+    cap_chunks: int = 0        # chunks × slots the device was held for
     t_first: float | None = None   # earliest dispatch seen
     t_last: float = 0.0            # latest drain seen
     latencies_s: collections.deque = dataclasses.field(
@@ -67,7 +108,26 @@ class _BucketStats:
 
     @property
     def occupancy(self) -> float:
+        """Fraction of device capacity spent on real work.  Under the
+        continuous engine this is busy slot-rounds over total
+        slot-rounds (time-weighted, the honest number when slots refill
+        mid-flight); the batch path keeps requests-over-slots."""
+        if self.slot_rounds:
+            return self.busy_slot_rounds / self.slot_rounds
         return self.requests / self.slots if self.slots else 0.0
+
+    @property
+    def work_occupancy(self) -> float:
+        """Chunk-weighted utilization: scheduler chunks spent on live
+        image work over the chunk-slots the device was held for.  The
+        one occupancy number comparable across the batch path and the
+        continuous engine — batch fill (``occupancy``) cannot see a
+        converged slot parked behind a straggler, this can.  Falls back
+        to :attr:`occupancy` when no chunk telemetry was recorded
+        (custom ops, fixed-length chains)."""
+        if self.cap_chunks:
+            return self.busy_chunks / self.cap_chunks
+        return self.occupancy
 
     @property
     def span_s(self) -> float:
@@ -80,10 +140,33 @@ class ServeMetrics:
     def __init__(self):
         self._buckets: dict[str, _BucketStats] = {}
         self.counters = collections.Counter()
+        self.traffic: dict[str, TrafficStats] = {}
 
     def count(self, name: str, n: int = 1) -> None:
         """Bump one lifecycle counter (see :data:`COUNTERS`)."""
         self.counters[name] += n
+
+    def record_arrival(self, sig_label: str, shape) -> None:
+        """Feed the per-run-signature traffic histogram (adaptive
+        ``pad_quantum`` input; see :class:`TrafficStats`)."""
+        self.traffic.setdefault(sig_label, TrafficStats()).record(shape)
+
+    def record_round(self, label: str, *, n_busy: int, n_slots: int,
+                     t: float, busy_chunks: int = 0,
+                     cap_chunks: int = 0) -> None:
+        """One continuous-engine scheduler round: ``n_busy`` of
+        ``n_slots`` slots held live requests at time ``t``, consuming
+        ``busy_chunks`` of ``cap_chunks`` chunk-slots.  Feeds the
+        time-weighted occupancy, the chunk-weighted work occupancy and
+        the bucket wall span."""
+        b = self._buckets.setdefault(label, _BucketStats())
+        b.rounds += 1
+        b.slot_rounds += n_slots
+        b.busy_slot_rounds += n_busy
+        b.busy_chunks += busy_chunks
+        b.cap_chunks += cap_chunks
+        b.t_first = t if b.t_first is None else min(b.t_first, t)
+        b.t_last = max(b.t_last, t)
 
     def record_batch(
         self,
@@ -97,6 +180,8 @@ class ServeMetrics:
         latencies_s,
         n_errors: int = 0,
         n_degraded: int = 0,
+        busy_chunks: int = 0,
+        cap_chunks: int = 0,
     ) -> None:
         b = self._buckets.setdefault(label, _BucketStats())
         b.requests += n_real
@@ -105,6 +190,8 @@ class ServeMetrics:
         b.pixels += pixels
         b.errors += n_errors
         b.degraded += n_degraded
+        b.busy_chunks += busy_chunks
+        b.cap_chunks += cap_chunks
         b.t_first = t_dispatch if b.t_first is None else min(b.t_first,
                                                              t_dispatch)
         b.t_last = max(b.t_last, t_done)
@@ -142,6 +229,8 @@ class ServeMetrics:
                 "errors": b.errors,
                 "degraded": b.degraded,
                 "batch_occupancy": b.occupancy,
+                "work_occupancy": b.work_occupancy,
+                "rounds": b.rounds,
                 "latency": self._percentiles(b.latencies_s),
                 "fps": fps,
                 "mpx_per_s": mpx,
@@ -152,6 +241,11 @@ class ServeMetrics:
             tot.pixels += b.pixels
             tot.errors += b.errors
             tot.degraded += b.degraded
+            tot.rounds += b.rounds
+            tot.slot_rounds += b.slot_rounds
+            tot.busy_slot_rounds += b.busy_slot_rounds
+            tot.busy_chunks += b.busy_chunks
+            tot.cap_chunks += b.cap_chunks
             if b.t_first is not None:
                 tot.t_first = (b.t_first if tot.t_first is None
                                else min(tot.t_first, b.t_first))
@@ -166,6 +260,8 @@ class ServeMetrics:
                 "errors": tot.errors,
                 "degraded": tot.degraded,
                 "batch_occupancy": tot.occupancy,
+                "work_occupancy": tot.work_occupancy,
+                "rounds": tot.rounds,
                 "latency": self._percentiles(all_lat),
                 "fps": fps,
                 "mpx_per_s": mpx,

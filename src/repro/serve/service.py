@@ -1,5 +1,5 @@
 """The serving front-end: admit → bucket → compile-or-hit → execute,
-with a fault-tolerant request lifecycle.
+as an event-driven engine with a fault-tolerant request lifecycle.
 
 ``Service`` ties the pieces together: the :mod:`registry` validates ops
 and params and lowers each request's expression, the :mod:`bucketer`
@@ -9,40 +9,68 @@ packing: ops with identical compiled run phases co-batch), the
 ``repro.api`` compile cache uses — to compiled bucket programs + their
 :class:`ChainPlan`, and the :mod:`executor` runs the double-buffered
 pipeline and demuxes results, applying each request's own finalize
-stage.
+stage.  With ``continuous=True``, refillable buckets (single
+convergence-driven segment on the pallas backend) run on a resident
+:class:`~repro.serve.continuous.SlotEngine` instead: converged slots
+are harvested and refilled mid-flight while stragglers keep iterating.
+
+Event-driven core: the service never sleeps and never spawns a thread —
+every deferred action is a timer on a :class:`~repro.serve.loop
+.EventLoop` sharing the service's injectable clock:
+
+* a **flush timer** per non-empty bucket, armed for its oldest
+  request's ``max_delay_ms`` deadline, launches the bucket with no
+  caller involvement the next time the loop is pumped;
+* an **expiry timer** per deadlined request sheds it the moment its
+  deadline lapses while queued (and launch re-checks deadlines *after*
+  compiling, closing the race where a request expiring during a long
+  trace/compile was still dispatched — previously expiry was only
+  evaluated inside ``poll()`` before staging began).
+
+Cooperative callers pump the loop via ``submit``/``poll``/``pump``;
+:class:`AsyncService` is the asyncio front-end that trampolines
+``next_deadline()`` into real ``call_at`` wakeups so deadline flushes
+fire with *no* caller, and resolves tickets into awaitable futures via
+``Ticket.add_done_callback``.  Under a
+:class:`~repro.serve.loop.VirtualClock` the same engine replays
+deterministically (the stepped-loop driver in ``tests/serve_sim.py``).
 
 Robustness contract (full version in ``docs/ROBUSTNESS.md``):
 
 * **admission** rejects malformed requests *synchronously* with typed
   errors (:mod:`repro.serve.errors`) before they can poison a bucket:
   arity/shape/dtype validation, lattice-dtype and non-finite payload
-  checks (``bucketer.check_payload``), and load shedding when the
-  bounded queue (``max_queue``) is full;
+  checks (``bucketer.check_payload``), load shedding when the bounded
+  queue (``max_queue``) is full, and :class:`ServiceClosedError` after
+  ``close()``;
 * **deadlines**: each request may carry one (``deadline_ms`` per
   request, ``default_deadline_ms`` service-wide); expired requests are
-  shed at launch with :class:`DeadlineExceededError` instead of wasting
-  device time;
+  shed — by timer while queued, and again post-compile at launch —
+  with :class:`DeadlineExceededError` instead of wasting device time;
+* **backpressure**: with ``high_water`` set, admission that leaves the
+  backlog at/above the watermark force-launches the fullest buckets
+  (counted as ``backpressure_flushes``) instead of letting latency
+  build behind the flush timers;
 * **execution failures** never escape ``poll()``/``flush()``/
   ``submit()``: the executor retries the batch with backoff, then
   bisect-quarantines so only poisoned requests fail (typed) while
-  healthy co-batched requests complete bit-exactly;
+  healthy co-batched requests complete bit-exactly — the slot engine
+  evicts its whole session into the same ladder;
 * **partial convergence** (scheduler watchdog) is delivered as a
   degraded result (``Ticket.degraded``), counted per bucket and in the
   lifecycle counters.
 
+Adaptive bucketing: with ``adaptive_quantum=True`` the per-run-
+signature traffic histograms (``ServeMetrics.traffic``) periodically
+re-evaluate ``pad_quantum`` — high pad waste halves the quantum
+(``quantum_splits``, splitting buckets to cut wasted pixels), many
+distinct bucket grids at negligible waste doubles it
+(``quantum_merges``, merging sparse buckets to recover co-batching).
+
 Deterministic fault injection (``serve/faults.py``, ``REPRO_FAULTS``)
 enters at the named sites; a Service built without ``faults=`` picks up
-the environment schedule.
-
-The service is single-threaded and cooperatively scheduled: ``submit``
-launches a bucket the moment it fills, and every ``submit``/``poll``
-also flushes buckets whose oldest request has waited ``max_delay_ms``.
-Callers that want strict deadline behaviour between submissions pump
-``poll()`` themselves (there is no background thread — see the ROADMAP
-follow-up); ``flush()`` force-launches everything and drains the
-pipeline, and ``Ticket.result()`` drives whatever its request still
-needs.  The layer map this front-end sits on top of is documented in
-``docs/ARCHITECTURE.md``.
+the environment schedule.  The layer map this front-end sits on top of
+is documented in ``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
@@ -60,9 +88,11 @@ from repro.serve.bucketer import (BucketKey, BucketQueue, PendingRequest,
                                   Ticket, bucket_hw, canonical_batch,
                                   check_payload, pad_fill)
 from repro.serve.cache import CacheEntry, CompiledProgramCache
+from repro.serve.continuous import SlotEngine
 from repro.serve.errors import (DeadlineExceededError, InvalidRequestError,
-                                QueueFullError)
+                                QueueFullError, ServiceClosedError)
 from repro.serve.executor import Executor
+from repro.serve.loop import EventLoop
 from repro.serve.metrics import ServeMetrics
 
 
@@ -80,20 +110,38 @@ class Service:
         default_deadline_ms: float | None = None,
         max_retries: int = 2,
         retry_backoff_ms: float = 0.0,
+        continuous: bool = False,
+        refill_quantum: int = 4,
+        high_water: int | None = None,
+        adaptive_quantum: bool = False,
+        adapt_every: int = 16,
         clock=time.monotonic,
         sleep=time.sleep,
+        loop: EventLoop | None = None,
         faults: F.FaultInjector | None = None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if max_queue is not None and max_queue < 1:
             raise ValueError("max_queue must be >= 1 (or None for unbounded)")
+        if refill_quantum < 1:
+            raise ValueError("refill_quantum must be >= 1")
+        if high_water is not None and high_water < 1:
+            raise ValueError("high_water must be >= 1 (or None to disable)")
+        if adapt_every < 1:
+            raise ValueError("adapt_every must be >= 1")
         self.backend = backend
         self.max_batch = max_batch
         self.pad_quantum = pad_quantum
         self.max_queue = max_queue
         self.default_deadline_ms = default_deadline_ms
-        self.clock = clock
+        self.continuous = continuous
+        self.refill_quantum = refill_quantum
+        self.high_water = high_water
+        self.adaptive_quantum = adaptive_quantum
+        self.adapt_every = adapt_every
+        self.loop = loop if loop is not None else EventLoop(clock)
+        self.clock = self.loop.clock
         self.faults = faults if faults is not None else F.from_env()
         self.metrics = ServeMetrics()
         self.cache = CompiledProgramCache(cache_capacity)
@@ -102,11 +150,15 @@ class Service:
         # (rewritten) run phases land on one compiled program
         self._program_sources: dict = {}
         self.executor = Executor(self.metrics, depth=pipeline_depth,
-                                 clock=clock, faults=self.faults,
+                                 clock=self.clock, faults=self.faults,
                                  max_retries=max_retries,
                                  backoff_s=retry_backoff_ms / 1e3,
                                  sleep=sleep)
         self._queue = BucketQueue(max_batch, max_delay_ms / 1e3)
+        self._flush_timers: dict[BucketKey, object] = {}
+        self._engines: dict[BucketKey, SlotEngine] = {}
+        self._quantum: dict[str, int] = {}  # adaptive per-sig overrides
+        self._closed = False
         self._next_id = 0
 
     # -- request intake ----------------------------------------------------
@@ -118,14 +170,20 @@ class Service:
 
         Admission is the only stage that raises: malformed requests get
         a typed :class:`~repro.serve.errors.RequestRejected` subclass,
-        a full bounded queue gets :class:`QueueFullError`.  Once a
-        ticket is returned, every later failure is recorded *on the
-        ticket* (typed), never raised from ``poll``/``flush``.
+        a full bounded queue gets :class:`QueueFullError`, a closed
+        service :class:`ServiceClosedError`.  Once a ticket is
+        returned, every later failure is recorded *on the ticket*
+        (typed), never raised from ``poll``/``flush``.
 
         ``deadline_ms`` (or the service's ``default_deadline_ms``)
-        bounds how long the request may sit queued: expired requests
-        are shed at launch with :class:`DeadlineExceededError`.
+        bounds how long the request may sit queued: an expiry timer
+        sheds it with :class:`DeadlineExceededError` the moment its
+        deadline lapses (launch re-checks after compiling, too).
         """
+        if self._closed:
+            self.metrics.count("rejected")
+            raise ServiceClosedError(
+                f"op {op!r}: service is closed — no new requests admitted")
         try:
             spec, imgs, canon = self._admit(op, images, params)
         except Exception:
@@ -141,6 +199,9 @@ class Service:
         info = registry.request_info(op, canon)
         if info.n_rewrites:
             self.metrics.count("rewrites_applied", info.n_rewrites)
+        self.metrics.record_arrival(info.label, imgs[0].shape)
+        if self.adaptive_quantum and info.pad_safe:
+            self._adapt_quantum(info)
 
         if self.faults.should_fire("deadline"):
             deadline_ms = self.faults.value("deadline", 0.0)
@@ -163,9 +224,20 @@ class Service:
         key = self._bucket_for(info, imgs[0].shape, imgs[0].dtype)
         ticket._bucket_key = key
         ticket._queued = True
-        if self._queue.add(key, req):
+        if ticket.deadline is not None:
+            # strict `now > deadline` shedding: fire just past the line
+            req.timer = self.loop.call_at(
+                ticket.deadline + 1e-9,
+                functools.partial(self._expire, key, req))
+        filled = self._queue.add(key, req)
+        if filled:
             self._launch(key)
-        self.poll()
+        elif self._queue.size(key) == 1:
+            self._rearm_flush(key)
+        if (self.high_water is not None
+                and len(self._queue) >= self.high_water):
+            self._backpressure()
+        self.loop.run_due()
         return ticket
 
     def _admit(self, op: str, images, params):
@@ -189,39 +261,143 @@ class Service:
         check_payload(op, imgs)  # lattice dtype + non-finite rejection
         return spec, imgs, spec.canonical_params(params)
 
+    # -- engine pumping ----------------------------------------------------
+
     def poll(self) -> None:
-        """Launch buckets whose oldest request exceeded max_delay_ms.
+        """Pump the engine once: fire due timers (bucket flushes,
+        request expiries) and advance every slot engine one round.
 
         Part of the robustness contract: ``poll`` never raises — batch
         failures resolve into typed per-ticket errors via the
         executor's recovery ladder.
         """
-        for key in self._queue.due(self.clock()):
-            self._launch(key)
+        self.loop.run_due()
+        self._step_engines()
+
+    def pump(self) -> bool:
+        """One cooperative engine turn: timers, one engine round each,
+        one pipeline drain.  Returns True when any progress was made
+        (the asyncio front-end's trampoline unit)."""
+        progress = self.loop.run_due() > 0
+        progress = self._step_engines() or progress
+        if self.executor.inflight:
+            progress = self.executor.drain_one() or progress
+        return progress
 
     def flush(self) -> None:
-        """Launch every queued bucket and drain the whole pipeline."""
+        """Launch every queued bucket, run every slot engine to empty
+        and drain the whole pipeline."""
         while True:
-            keys = self._queue.keys()
-            if not keys:
-                break
-            for key in keys:
+            for key in self._queue.keys():
                 self._launch(key)
+            if not self._step_engines() and not len(self._queue):
+                break
         self.executor.drain_all()
 
+    def close(self) -> None:
+        """Drain everything, then refuse new work (idempotent).
+        Requests admitted before close still reach terminal outcomes."""
+        if not self._closed:
+            self.flush()
+            self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def work_pending(self) -> bool:
+        """True while anything queued, resident in a slot engine, or in
+        the executor pipeline still needs pumping."""
+        return bool(len(self._queue) or self.executor.inflight
+                    or any(e.occupied for e in self._engines.values()))
+
+    def next_deadline(self) -> float | None:
+        """Earliest armed timer (flush/expiry) on the service clock —
+        what the asyncio front-end turns into a real wakeup."""
+        return self.loop.next_deadline()
+
+    def _step_engines(self) -> bool:
+        progress = False
+        for engine in list(self._engines.values()):
+            progress = engine.step() or progress
+        return progress
+
     def _complete(self, ticket: Ticket) -> None:
-        """Drive the pipeline until ``ticket`` resolves (Ticket.result)."""
-        if ticket._queued:
-            self._launch(ticket._bucket_key)
-        while not ticket.done and self.executor.drain_one():
-            pass
+        """Drive the engine until ``ticket`` resolves (Ticket.result)."""
+        while not ticket.done:
+            progress = self.loop.run_due() > 0
+            if ticket._queued:
+                self._launch(ticket._bucket_key)
+                progress = True
+            progress = self._step_engines() or progress
+            progress = self.executor.drain_one() or progress
+            if not progress:
+                break
 
     # -- bucket launch -----------------------------------------------------
 
+    def _rearm_flush(self, key: BucketKey) -> None:
+        """(Re-)arm the bucket's deadline-flush timer for its current
+        oldest request; cancel it when the bucket is empty."""
+        old = self._flush_timers.pop(key, None)
+        if old is not None:
+            old.cancel()
+        oldest = self._queue.oldest(key)
+        if oldest is not None:
+            self._flush_timers[key] = self.loop.call_at(
+                oldest.ticket.t_enqueue + self._queue.max_delay_s,
+                functools.partial(self._launch, key))
+
+    def _expire(self, key: BucketKey, req: PendingRequest) -> None:
+        """Expiry-timer callback: shed ``req`` if it is still queued
+        (deadlines only bound queue time; in-flight requests finish)."""
+        req.timer = None
+        t = req.ticket
+        if t.done or not t._queued:
+            return
+        if not self._queue.discard(key, req):
+            return
+        t._queued = False
+        now = self.clock()
+        t.error = DeadlineExceededError(
+            f"request {t.request_id} ({t.op}) waited "
+            f"{(now - t.t_enqueue) * 1e3:.1f}ms, past its deadline"
+        )
+        t._fulfill(now)
+        self.metrics.count("expired")
+        self._rearm_flush(key)  # the bucket's oldest may have changed
+
+    def _backpressure(self) -> None:
+        """Watermark relief: force-launch the fullest buckets until the
+        backlog drops below ``high_water`` (or nothing can launch)."""
+        while self._queue.keys() and len(self._queue) >= self.high_water:
+            key = max(self._queue.keys(), key=self._queue.size)
+            before = len(self._queue)
+            self.metrics.count("backpressure_flushes")
+            self._launch(key)
+            if len(self._queue) >= before:
+                break  # engine full / everything shed: don't spin
+
     def _launch(self, key: BucketKey) -> None:
+        """Launch one bucket: into its slot engine when continuous and
+        refillable, else as one canonical batch.  Never raises."""
+        timer = self._flush_timers.pop(key, None)
+        if timer is not None:
+            timer.cancel()
+        engine = self._engines.get(key)
+        if engine is None and self.continuous:
+            engine = self._spawn_engine(key)
+        if engine is not None:
+            engine.pull()
+            self._rearm_flush(key)
+            return
         requests = self._queue.pop(key)
         for req in requests:
             req.ticket._queued = False
+            if req.timer is not None:
+                req.timer.cancel()
+                req.timer = None
+        self._rearm_flush(key)  # anything beyond max_batch stays queued
         requests = self._shed_expired(requests)
         if not requests:
             return
@@ -230,6 +406,16 @@ class Service:
         n_slots = canonical_batch(len(requests), self.max_batch)
         try:
             entry = self._entry_for(key, info, n_slots, warm=False)
+            # deadline re-check *after* compiling: a request whose
+            # deadline lapsed during a long trace/compile must not be
+            # dispatched (the old poll-time-only check raced here)
+            live = self._shed_expired(requests)
+            if not live:
+                return
+            if len(live) < len(requests):
+                requests = live
+                n_slots = canonical_batch(len(requests), self.max_batch)
+                entry = self._entry_for(key, info, n_slots, warm=False)
             stacked = self._stage(info, key, requests, n_slots)
             self.faults.check("dispatch", key.label())
             self._check_poison(requests)
@@ -243,19 +429,42 @@ class Service:
         self.executor.dispatch(entry, key, requests, n_slots, stacked,
                                runner=runner)
 
+    def _spawn_engine(self, key: BucketKey) -> SlotEngine | None:
+        """Build the bucket's slot engine if its program is refillable
+        (single convergent pallas segment); None routes to the batch
+        path.  Compile failures fall through — the batch path's ladder
+        reports them."""
+        oldest = self._queue.oldest(key)
+        if oldest is None or oldest.info.expr is None:
+            return None
+        try:
+            entry = self._entry_for(key, oldest.info, self.max_batch,
+                                    warm=False)
+        except Exception:
+            return None
+        if entry.exe is None or not entry.exe.refillable:
+            return None
+        engine = SlotEngine(self, key, oldest.info, entry)
+        self._engines[key] = engine
+        return engine
+
     def _shed_expired(self, requests):
         """Deadline shedding at launch: typed errors, no device time."""
         now = self.clock()
         live = []
         for req in requests:
             t = req.ticket
+            if t.done:
+                continue  # expiry timer beat us to it
             if t.deadline is not None and now > t.deadline:
+                if req.timer is not None:
+                    req.timer.cancel()
+                    req.timer = None
                 t.error = DeadlineExceededError(
                     f"request {t.request_id} ({t.op}) waited "
                     f"{(now - t.t_enqueue) * 1e3:.1f}ms, past its deadline"
                 )
-                t.done = True
-                t.t_done = now
+                t._fulfill(now)
                 self.metrics.count("expired")
             else:
                 live.append(req)
@@ -278,19 +487,52 @@ class Service:
         entry = self._entry_for(key, info, n_slots, warm=False)
         stacked = self._stage(info, key, requests, n_slots)
         self._check_poison(requests)
-        outputs, conv = Executor._call_entry(entry, stacked)
+        outputs, conv, _ = Executor._call_entry(entry, stacked)
         jax.block_until_ready((outputs, conv))
         return outputs, n_slots, conv
+
+    # -- bucketing policy --------------------------------------------------
 
     def _bucket_for(self, info, shape, dtype) -> BucketKey:
         """The one place (submit + warmup) bucket keys are derived."""
         h, w = shape
+        quantum = self._quantum.get(info.label, self.pad_quantum)
         return BucketKey(
             sig=info.sig,
-            hw=bucket_hw(h, w, self.pad_quantum) if info.pad_safe else (h, w),
+            hw=bucket_hw(h, w, quantum) if info.pad_safe else (h, w),
             dtype=str(np.dtype(dtype)),
             tag=info.label,
         )
+
+    def _adapt_quantum(self, info) -> None:
+        """Periodically re-fit the run signature's pad quantum to its
+        observed traffic (every ``adapt_every`` arrivals): pad waste
+        above 25% halves the quantum (``quantum_splits``), while many
+        distinct bucket grids at under 5% waste doubles it
+        (``quantum_merges``) to recover co-batching.  Pure function of
+        the arrival history — deterministic under the virtual clock."""
+        ts = self.metrics.traffic.get(info.label)
+        if ts is None or ts.arrivals % self.adapt_every:
+            return
+        q = self._quantum.get(info.label, self.pad_quantum)
+        raw = padded = 0
+        grids = set()
+        for (h, w), n in ts.shapes.items():
+            hh, ww = bucket_hw(h, w, q)
+            raw += n * h * w
+            padded += n * hh * ww
+            grids.add((hh, ww))
+        if not padded:
+            return
+        waste = 1.0 - raw / padded
+        if waste > 0.25 and q > 8:
+            self._quantum[info.label] = q // 2
+            self.metrics.count("quantum_splits")
+        elif waste < 0.05 and len(grids) > 2 and q < 1024:
+            self._quantum[info.label] = q * 2
+            self.metrics.count("quantum_merges")
+
+    # -- compile-or-hit ----------------------------------------------------
 
     def _cache_identity(self, key: BucketKey, info, n_slots: int):
         """The cache key (and, for expression ops, the Executable —
@@ -324,7 +566,7 @@ class Service:
                 cache_key,
                 lambda: CacheEntry(fn=exe.run_batch, plan=exe.plan,
                                    key=cache_key,
-                                   stats_fn=exe.run_batch_stats),
+                                   stats_fn=exe.run_batch_stats, exe=exe),
             )
         spec = registry.get(info.sig[1])  # ("custom", name, canon)
         return lookup(
@@ -373,6 +615,8 @@ class Service:
         to ``max_batch``).  Each entry is compiled *and* executed once on
         a sentinel-only stack so first real traffic pays neither trace
         nor compile time; warm builds are excluded from hit/miss stats.
+        With ``continuous=True`` the refillable session's entry points
+        (init/admit/round/extract) are traced too.
         """
         for e in entries:
             spec = registry.get(e["op"])
@@ -382,13 +626,29 @@ class Service:
             n_slots = canonical_batch(e.get("batch", self.max_batch),
                                       self.max_batch)
             cache_key, _ = self._cache_identity(key, info, n_slots)
-            if cache_key in self.cache:
-                continue  # already resident: don't re-execute the program
-            entry = self._entry_for(key, info, n_slots, warm=True)
-            stacked = self._stage(info, key, [], n_slots)
-            # execute the callable dispatch will use (the stats variant
-            # for expression programs), so first traffic pays no trace
-            jax.block_until_ready(entry.primary()(*stacked))
+            if cache_key not in self.cache:
+                entry = self._entry_for(key, info, n_slots, warm=True)
+                stacked = self._stage(info, key, [], n_slots)
+                # execute the callable dispatch will use (the stats
+                # variant for expression programs): no trace on traffic
+                jax.block_until_ready(entry.primary()(*stacked))
+            if self.continuous and info.expr is not None:
+                self._warm_session(key, info)
+
+    def _warm_session(self, key: BucketKey, info) -> None:
+        """Trace a refillable bucket's slot-session entry points on a
+        sentinel slot so the first continuous round pays no trace."""
+        entry = self._entry_for(key, info, self.max_batch, warm=True)
+        if entry.exe is None or not entry.exe.refillable:
+            return
+        session = entry.exe.slot_session(self.refill_quantum)
+        dtype = np.dtype(key.dtype)
+        sentinels = tuple(
+            jnp.full(key.hw, pad_fill(dtype, info.fills[j]), dtype)
+            for j in range(info.n_inputs))
+        state = session.admit(session.init(), 0, *sentinels)
+        state, _, _ = session.round(state)
+        jax.block_until_ready(session.extract(state))
 
     def stats(self) -> dict:
         """Metrics summary (buckets/totals/counters/cache/faults),
@@ -404,7 +664,97 @@ class Service:
                 + self.metrics.counter_rows())
 
     def pending(self) -> int:
-        return len(self._queue)
+        """Requests awaiting a result: queued plus resident in slot
+        engines (in-flight executor batches are not counted — they are
+        already past admission/launch)."""
+        return len(self._queue) + sum(e.n_occupied
+                                      for e in self._engines.values())
+
+
+class AsyncService:
+    """asyncio front-end: the same engine, with timers trampolined onto
+    the running event loop so deadline flushes and expiries fire with
+    **no caller**, and tickets awaitable as futures.
+
+    Must be constructed inside a running asyncio event loop (the
+    service clock defaults to ``loop.time`` so service timers and
+    asyncio wakeups share one timebase).  ``submit`` is synchronous
+    (admission raises immediately, as with :class:`Service`) and
+    returns the plain :class:`Ticket`; ``await result(ticket)`` parks
+    until the engine completes it.  Device rounds run *on* the loop
+    thread — the engine is single-threaded by design — so concurrency
+    here means overlapping request lifetimes, not parallel compute.
+    """
+
+    def __init__(self, *, loop=None, **kwargs):
+        import asyncio
+        self._aio = loop if loop is not None else asyncio.get_running_loop()
+        kwargs.setdefault("clock", self._aio.time)
+        self.service = Service(**kwargs)
+        self._handle = None
+
+    def submit(self, op: str, *images, params=None,
+               deadline_ms: float | None = None) -> Ticket:
+        ticket = self.service.submit(op, *images, params=params,
+                                     deadline_ms=deadline_ms)
+        self._schedule()
+        return ticket
+
+    async def result(self, ticket: Ticket):
+        """Await the ticket's terminal outcome, then unwrap it (raises
+        its typed error exactly like ``Ticket.result``)."""
+        if not ticket.done:
+            fut = self._aio.create_future()
+            ticket.add_done_callback(
+                lambda t: fut.done() or fut.set_result(None))
+            self._schedule()
+            await fut
+        if ticket.error is not None:
+            raise ticket.error
+        return ticket.value
+
+    async def run(self, op: str, *images, params=None,
+                  deadline_ms: float | None = None):
+        """submit + await result in one call."""
+        return await self.result(self.submit(
+            op, *images, params=params, deadline_ms=deadline_ms))
+
+    async def close(self):
+        """Drain all outstanding work (yielding between pump turns),
+        then close the underlying service."""
+        import asyncio
+        while self.service.work_pending():
+            self.service.pump()
+            await asyncio.sleep(0)
+        self.service.close()
+        if self._handle is not None:
+            self._handle.cancel()
+            self._handle = None
+
+    def stats(self) -> dict:
+        return self.service.stats()
+
+    # -- trampoline --------------------------------------------------------
+
+    def _schedule(self) -> None:
+        """Arm the next wakeup: immediately while work is in flight,
+        else at the service's earliest timer deadline."""
+        if self._handle is not None:
+            self._handle.cancel()
+            self._handle = None
+        svc = self.service
+        if svc.work_pending():
+            self._handle = self._aio.call_soon(self._pump)
+            return
+        nxt = svc.next_deadline()
+        if nxt is not None:
+            self._handle = self._aio.call_later(
+                max(0.0, nxt - svc.clock()), self._pump)
+
+    def _pump(self) -> None:
+        self._handle = None
+        self.service.pump()
+        self._schedule()
 
 
 def serve_stream(service: Service, requests) -> list:

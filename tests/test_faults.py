@@ -25,7 +25,9 @@ import pytest
 from numpy.testing import assert_array_equal
 
 from repro.core import operators as OPS
-from repro.serve import Service, registry  # noqa: F401 (registry: op hooks)
+from repro.kernels import ops as K
+from repro.serve import Service, VirtualClock
+from repro.serve import registry  # noqa: F401 (registry: op hooks)
 from repro.serve import faults as F
 from repro.serve.errors import (DeadlineExceededError, NonFiniteInputError,
                                 PoisonedRequestError, QueueFullError,
@@ -280,6 +282,173 @@ def test_no_unstructured_exception_escapes_poll(rng):
         assert t.outcome != "pending"
     snap = svc.stats()["faults"]
     assert set(snap["fired"]) <= set(F.SITES)
+
+
+# ---------------------------------------------------------------------------
+# PR 9: the chaos matrix under the event-driven continuous engine
+# ---------------------------------------------------------------------------
+
+
+def _recon_pair(rng, shape=(24, 24), slow=False):
+    h, w = shape
+    if slow:
+        f = np.full(shape, 0.1, np.float32)
+        for r in range(0, h, 2):
+            f[r, :] = 0.9
+            if r + 1 < h:
+                f[r + 1, -1 if (r // 2) % 2 == 0 else 0] = 0.9
+        m = np.full(shape, 0.05, np.float32)
+        m[0, 0] = 0.8
+    else:
+        f = rng.random(shape).astype(np.float32)
+        m = (0.9 * f).astype(np.float32)
+    return np.minimum(m, f), f
+
+
+def _continuous_service(spec="", **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_delay_ms", 1e9)
+    kw.setdefault("pad_quantum", 16)
+    kw.setdefault("refill_quantum", 2)
+    kw.setdefault("max_retries", 1)
+    kw.setdefault("sleep", lambda s: None)
+    kw.setdefault("clock", VirtualClock())
+    return Service(backend="pallas", continuous=True,
+                   faults=F.parse(spec), **kw)
+
+
+def _drive(svc, tickets, clock, max_steps=2000):
+    for _ in range(max_steps):
+        if all(t.done for t in tickets):
+            return
+        clock.advance(1e-3)
+        svc.poll()
+        svc.executor.drain_all()
+    raise AssertionError("continuous engine failed to complete tickets")
+
+
+@pytest.mark.parametrize("site", ["dispatch", "drain", "poison"])
+def test_chaos_matrix_continuous_engine(rng, site):
+    """The PR 7 chaos matrix re-run on the stepped continuous engine:
+    an injected failure at any site resolves through the recovery
+    ladder with every healthy request completing bit-exactly and only
+    a poisoned request getting a typed error — the session eviction
+    path must not lose or corrupt occupants."""
+    clock = VirtualClock()
+    svc = _continuous_service(spec=f"{site}:n=1", clock=clock)
+    cases = [_recon_pair(rng) for _ in range(4)]
+    tickets = [svc.submit("reconstruct", m, f) for m, f in cases]
+    svc.flush()
+    _drive(svc, tickets, clock)
+
+    poisoned = [t for t in tickets if t.outcome == "poisoned"]
+    healthy = [t for t in tickets if t.outcome == "ok"]
+    if site == "poison":
+        assert len(poisoned) == 1 and len(healthy) == 3
+        with pytest.raises(PoisonedRequestError):
+            poisoned[0].result()
+        assert svc.stats()["counters"]["poisoned"] == 1
+    else:
+        assert len(healthy) == 4 and not poisoned
+        assert svc.stats()["counters"]["retried"] >= 1
+    assert svc.stats()["counters"]["batch_failures"] >= 1
+    for t in healthy:
+        m, f = cases[t.request_id]
+        ref = np.asarray(K.reconstruct(m, f, op="dilate"))
+        assert_array_equal(np.asarray(t.result()), ref)
+    assert svc.faults.fired[site] == 1
+
+
+def test_poison_mid_refill_preserves_healthy_and_straggler(rng):
+    """A poisoned request arriving in a *refill wave* (admitted while
+    a straggler slot is still iterating) kills the session — eviction
+    plus bisect-quarantine must isolate it while the straggler and
+    every other occupant still complete bit-exactly."""
+    clock = VirtualClock()
+    svc = _continuous_service(clock=clock, refill_quantum=1)
+    slow = _recon_pair(rng, slow=True)
+    fast = [_recon_pair(rng) for _ in range(3)]
+    cases = [slow] + fast
+    tickets = [svc.submit("reconstruct", m, f) for m, f in cases]
+    for key in list(svc._queue.keys()):
+        svc._launch(key)  # engine spawned, first wave resident
+    eng = next(iter(svc._engines.values()))
+    assert eng.occupied
+    for _ in range(3):
+        svc.poll()  # free the fast slots while the straggler runs
+    # next submission is poison, admitted into a freed slot mid-flight
+    svc.faults.specs["poison"] = F.FaultSpec("poison", n=1)
+    bad_pair = _recon_pair(rng)
+    cases.append(bad_pair)
+    tickets.append(svc.submit("reconstruct", *bad_pair))
+    for key in list(svc._queue.keys()):
+        svc._launch(key)
+    _drive(svc, tickets, clock)
+
+    assert tickets[-1].outcome == "poisoned"
+    for t in tickets[:-1]:
+        assert t.outcome == "ok"
+        m, f = cases[t.request_id]
+        ref = np.asarray(K.reconstruct(m, f, op="dilate"))
+        assert_array_equal(np.asarray(t.result()), ref)
+    assert svc.stats()["counters"]["refills"] >= 1
+
+
+def test_budget_degrades_continuous_engine(rng):
+    """The budget site under continuous batching: a 1-chunk budget
+    truncates the slot, which is harvested as a degraded partial
+    fixpoint (never an error) — same contract as the batch path."""
+    clock = VirtualClock()
+    svc = _continuous_service(spec="budget:value=1", clock=clock)
+    marker = np.zeros((32, 32), np.float32)
+    marker[0, 0] = 1.0
+    mask = np.ones((32, 32), np.float32)
+    t = svc.submit("reconstruct", marker, mask)
+    svc.flush()
+    _drive(svc, [t], clock)
+    assert t.error is None and t.degraded and t.outcome == "degraded"
+    assert t.result() is not None
+    assert svc.stats()["counters"]["degraded"] == 1
+
+
+def test_deadline_fault_expires_under_stepped_loop(rng):
+    clock = VirtualClock()
+    svc = _continuous_service(spec="deadline:n=1", clock=clock)
+    svc.faults.specs["deadline"] = F.FaultSpec("deadline", n=1, value=1.0)
+    t = svc.submit("reconstruct", *_recon_pair(rng))
+    clock.advance(0.01)
+    svc.poll()  # the expiry timer fires from the stepped loop
+    assert t.outcome == "deadline"
+    assert svc.stats()["counters"]["expired"] == 1
+
+
+def test_no_unstructured_escape_continuous(rng):
+    """The umbrella invariant on the async path: an aggressive ambient
+    schedule (REPRO_FAULTS when set, as in CI) over the stepped
+    continuous engine still resolves every ticket into a typed
+    outcome, with no exception escaping submit/poll/flush."""
+    import os
+    spec = os.environ.get(
+        "REPRO_FAULTS",
+        "seed=1702;dispatch:p=0.3;drain:p=0.3;poison:p=0.2",
+    )
+    clock = VirtualClock()
+    svc = _continuous_service(spec=spec, clock=clock, max_delay_ms=2.0)
+    tickets = []
+    for i in range(8):
+        try:
+            tickets.append(svc.submit("reconstruct",
+                                      *_recon_pair(rng, slow=(i == 0))))
+        except ServeError:
+            pass
+        clock.advance(1e-3)
+        svc.poll()
+    svc.flush()
+    _drive(svc, tickets, clock)
+    for t in tickets:
+        assert t.done and t.outcome != "pending"
+        assert t.error is None or isinstance(t.error, ServeError)
+    assert set(svc.stats()["faults"]["fired"]) <= set(F.SITES)
 
 
 def test_stats_surface_faults_and_counters(rng):

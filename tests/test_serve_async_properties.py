@@ -1,0 +1,117 @@
+"""Property tests for the event-driven continuous engine (PR 9): any
+random arrival schedule and op mix driven through the virtual-clock
+stepped loop must be (a) bit-exact with sequential solo execution of
+each request and (b) lifecycle-sound — every admitted ticket reaches
+exactly one terminal outcome, observed through ``add_done_callback``.
+
+Self-skips when hypothesis is unavailable (it is not part of the
+pinned environment), like tests/test_properties.py.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from serve_sim import SimHarness  # noqa: E402
+from repro.serve import Service, VirtualClock  # noqa: E402
+
+pytestmark = pytest.mark.serve
+
+# (op kind, straggler?, image seed) — reconstruction dominates because
+# it is the refillable path; qdt exercises the two-output session.
+_arrival = st.tuples(
+    st.sampled_from(["reconstruct", "reconstruct", "qdt"]),
+    st.booleans(),
+    st.integers(0, 4),
+    st.integers(1, 8),   # inter-arrival gap, virtual ms
+)
+
+
+def _payload(kind, slow, seed, shape=(24, 24)):
+    rng = np.random.default_rng(seed)
+    if kind == "qdt":
+        return ((rng.random(shape) > 0.4).astype(np.float32),)
+    h, w = shape
+    if slow:
+        f = np.full(shape, 0.1, np.float32)
+        for r in range(0, h, 2):
+            f[r, :] = 0.9
+            if r + 1 < h:
+                f[r + 1, -1 if (r // 2) % 2 == 0 else 0] = 0.9
+        m = np.full(shape, 0.05, np.float32)
+        m[0, 0] = 0.8
+    else:
+        f = rng.random(shape).astype(np.float32)
+        m = (0.9 * f).astype(np.float32)
+    return (np.minimum(m, f), f)
+
+
+def _sequential_reference(arrivals):
+    """Each request solo through a fresh max_batch=1 batch-path
+    service: the sequential-execution baseline the engine must match
+    bit for bit (including degraded partial fixpoints — the budget is
+    identical)."""
+    out = []
+    for kind, slow, seed, _gap in arrivals:
+        svc = Service(max_batch=1, max_delay_ms=1e9, pad_quantum=16,
+                      clock=VirtualClock())
+        t = svc.submit(kind, *_payload(kind, slow, seed))
+        svc.flush()
+        out.append((t.outcome, t.value))
+    return out
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(_arrival, min_size=1, max_size=6))
+def test_async_schedule_bit_exact_vs_sequential(arrivals):
+    harness = SimHarness(continuous=True, max_batch=4, refill_quantum=2,
+                         max_delay_ms=2.0, pad_quantum=16)
+    t = 0.0
+    schedule = []
+    for kind, slow, seed, gap in arrivals:
+        t += gap * 1e-3
+        schedule.append((t, kind, _payload(kind, slow, seed), None, None))
+    tickets = harness.play(schedule)
+    harness.run_until_idle()
+    reference = _sequential_reference(arrivals)
+    for tk, (ref_outcome, ref_value) in zip(tickets, reference):
+        assert tk is not None and tk.done
+        assert tk.outcome == ref_outcome
+        got = tk.value if isinstance(tk.value, tuple) else (tk.value,)
+        ref = ref_value if isinstance(ref_value, tuple) else (ref_value,)
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(_arrival, min_size=1, max_size=6),
+       st.sampled_from([None, 1.0, 25.0]))
+def test_every_ticket_exactly_one_terminal_outcome(arrivals, deadline_ms):
+    """Exactly-once termination: each admitted ticket's done callback
+    fires once, its outcome is terminal, and tight deadlines resolve
+    as typed expiries rather than lost tickets."""
+    harness = SimHarness(continuous=True, max_batch=4, refill_quantum=2,
+                         max_delay_ms=3.0, pad_quantum=16)
+    completions: dict[int, int] = {}
+    t = 0.0
+    for kind, slow, seed, gap in arrivals:
+        t += gap * 1e-3
+        harness.step_until(t)
+        tk = harness.submit(kind, *_payload(kind, slow, seed),
+                            deadline_ms=deadline_ms)
+        if tk is not None:
+            tk.add_done_callback(
+                lambda done_t: completions.__setitem__(
+                    done_t.request_id,
+                    completions.get(done_t.request_id, 0) + 1))
+    harness.run_until_idle()
+    assert len(completions) == len(harness.tickets)
+    assert set(completions.values()) <= {1}  # exactly once, never twice
+    for tk in harness.tickets:
+        assert tk.done and tk.outcome != "pending"
+        assert tk.outcome in ("ok", "degraded", "deadline")
+        if tk.outcome == "deadline":
+            assert tk.error is not None and tk.value is None
+        else:
+            assert tk.error is None and tk.value is not None
