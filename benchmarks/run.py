@@ -23,6 +23,8 @@ Modules:
   pipeline   repro.api expression pipeline: fused vs per-stage ASF
              (pad/launch round-trip counts from Executable.stats())
              and the compile-cache hit rate
+  gdt        generalised geodesic distance: wavefront requeue vs
+             raster-sweep schedules vs the binary L1 QDT baseline
 """
 from __future__ import annotations
 
@@ -31,8 +33,8 @@ import json
 import pathlib
 
 from benchmarks import (bench_chain, bench_crossover, bench_dims,
-                        bench_operators, bench_pipeline, bench_roofline,
-                        bench_serve, bench_table3)
+                        bench_gdt, bench_operators, bench_pipeline,
+                        bench_roofline, bench_serve, bench_table3)
 from benchmarks.common import emit
 
 MODULES = {
@@ -44,6 +46,7 @@ MODULES = {
     "roofline": bench_roofline,
     "serve": bench_serve,
     "pipeline": bench_pipeline,
+    "gdt": bench_gdt,
 }
 
 
@@ -59,6 +62,10 @@ def main() -> None:
     args = ap.parse_args()
 
     names = args.only.split(",") if args.only else list(MODULES)
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown suite(s) {', '.join(sorted(unknown))}; "
+                 f"available: {', '.join(MODULES)}")
     outdir = None
     if args.json is not None:
         outdir = pathlib.Path(args.json)

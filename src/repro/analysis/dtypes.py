@@ -174,4 +174,11 @@ def check_executable_dtypes(exe) -> list:
         out += check_qdt_accumulator(dt)
         if exe.plan is not None:
             out += check_distance_plane(exe._max_chunks_qdt, exe.plan.fuse_k)
+    if (dt.kind != "f"
+            and any(s.kind == "gdt" for s in exe.program.segments)):
+        out.append(Finding(
+            "dtype", ERROR, f"gdt on {dt.name}",
+            "the generalised geodesic distance plane is a float lattice "
+            "(+inf pad identity, fractional grey weights) — integer "
+            "images must be cast to a float dtype before compilation"))
     return out

@@ -42,7 +42,8 @@ from repro.analysis.findings import ERROR, WARN, Finding
 #: not imported from ``api.lower`` so the two derivations cross-check.
 REQUIRED_FILL = {"erode": "hi", "dilate": "lo"}
 
-_KINDS = ("chain", "geodesic", "reconstruct", "qdt", "refill")
+_KINDS = ("chain", "geodesic", "reconstruct", "qdt", "gdt", "refill",
+          "point")
 
 
 def _evolved(fill: str) -> tuple:
@@ -56,15 +57,22 @@ def _seg_name(i: int, seg) -> str:
 def segment_reach(seg) -> int | None:
     """Chebyshev reach (pixels of influence) of one kernel segment;
     None for convergence-driven segments (reach = iterations to
-    convergence, unbounded statically)."""
+    convergence, unbounded statically).  Raises on a kind this proof
+    does not know — silently assuming 0 reach for a new segment kind
+    would under-cover its halo."""
     if seg.kind == "chain":
         return int(seg.param("n"))
     if seg.kind == "geodesic":
         # the geodesic clamp is pointwise: reach equals the chain's
         return int(seg.param("n"))
-    if seg.kind in ("reconstruct", "qdt"):
+    if seg.kind in ("reconstruct", "qdt", "gdt"):
         return None
-    return 0  # refill: pointwise masked fill
+    if seg.kind in ("refill", "point"):
+        return 0  # pointwise: masked fill / elementwise expression
+    raise ValueError(
+        f"segment_reach: unknown segment kind {seg.kind!r} — teach the "
+        "halo proof its reach before lowering it"
+    )
 
 
 def check_program(program) -> list:
@@ -119,6 +127,36 @@ def check_program(program) -> list:
             if fill not in ("hi", "lo"):
                 err(name, f"refill to unknown identity {fill!r}")
             state[seg.dsts[0]] = fill
+            continue
+
+        if seg.kind == "point":
+            if len(seg.dsts) != 1 or not seg.srcs:
+                err(name, f"arity: expected ≥1 srcs/1 dst, got "
+                          f"{len(seg.srcs)}/{len(seg.dsts)}")
+            # elementwise on the padded planes: the pad region computes
+            # from whatever fills the operands carry — poison the
+            # output so a kernel consumer must refill first
+            for d in seg.dsts:
+                state[d] = None
+            continue
+
+        if seg.kind == "gdt":
+            if len(seg.srcs) != 2 or len(seg.dsts) != 1:
+                err(name, f"arity: expected 2 srcs/1 dst, got "
+                          f"{len(seg.srcs)}/{len(seg.dsts)}")
+            for s in seg.srcs:
+                got = state.get(s)
+                if got != "lo":
+                    err(name,
+                        f"operand slot {s} pad state is {got!r} but "
+                        "gdt's pad detection keys on the exact "
+                        "lattice-bottom fill 'lo' (−inf) — an evolved "
+                        "or foreign pad would be misclassified as "
+                        "image cells")
+            # distance plane: pad holds +inf distances, absorbing for
+            # nothing — poison it like the qdt outputs.
+            for d in seg.dsts:
+                state[d] = None
             continue
 
         if seg.kind == "qdt":

@@ -26,6 +26,8 @@ from __future__ import annotations
 import argparse
 import sys
 
+import numpy as np
+
 from repro.analysis import dtypes as dtype_checks
 from repro.analysis.findings import Report, VerificationError
 from repro.analysis.verifier import verify_executable
@@ -57,6 +59,8 @@ def iter_registry_cases(ops=None, dtypes=DTYPES, shapes=SHAPES,
             continue
         expr = spec.build_expr(_sample_params(spec))
         for dtype in dtypes:
+            if np.dtype(dtype).kind not in spec.dtypes:
+                continue  # e.g. gdt ops are float-lattice only
             for shape3 in shapes:
                 for backend in backends:
                     yield (f"{name}[{dtype},{shape3},{backend}]",

@@ -65,6 +65,13 @@ def check_plan(plan, shape3=None) -> list:
         err(f"n_images={plan.n_images} < 1")
     if plan.n_chunks < 1:
         err(f"n_chunks={plan.n_chunks} < 1")
+    # re-derived from core.chain.SCHEDULES by value, not by import, so
+    # a forged plan with a typo'd schedule is caught here too
+    if getattr(plan, "schedule", "wavefront") not in ("wavefront",
+                                                      "raster"):
+        err(f"schedule={plan.schedule!r} is not a known schedule "
+            "('wavefront' | 'raster') — the executable would fall "
+            "through to the wavefront path silently")
 
     if plan.tile_w < 0:
         err(f"tile_w={plan.tile_w} < 0")

@@ -52,7 +52,8 @@ def verify_executable(exe, level: str = "fast") -> Report:
         segs = exe.program.segments
         for idxs, plan in exe.seg_plans:
             group = tuple(segs[i] for i in idxs)
-            conv = any(s.kind in ("reconstruct", "qdt") for s in group)
+            conv = any(s.kind in ("reconstruct", "qdt", "gdt")
+                       for s in group)
             report.extend(plans.check_plan(plan, shape3))
             report.extend(halo.check_coverage(
                 exe.program, plan, shape3, segments=group, convergent=conv))

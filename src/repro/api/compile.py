@@ -49,7 +49,7 @@ from repro.core.chain import plan_chain
 CACHE_CAPACITY = 512
 
 #: Segment kinds whose work is convergence-driven (vs fixed-length).
-_CONVERGENT_KINDS = ("reconstruct", "qdt")
+_CONVERGENT_KINDS = ("reconstruct", "qdt", "gdt")
 
 _cache: collections.OrderedDict = collections.OrderedDict()
 _sources: dict = {}  # cache key → set of source Exprs that mapped to it
@@ -157,16 +157,16 @@ def segment_groups(program) -> tuple:
 
     Each group is ``(segment_indices, convergent)``: a maximal run of
     kernel segments of one work class — fixed-length (chain/geodesic)
-    or convergence-driven (reconstruct/qdt) — plus the refill segments
-    that prepare operands for it (refills attach to the *next* kernel
-    segment; trailing refills join the last group).
+    or convergence-driven (reconstruct/qdt/gdt) — plus the refill and
+    ``point`` segments that prepare operands for it (both attach to the
+    *next* kernel segment; trailing ones join the last group).
     """
     groups: list = []
     current: list = []
     current_conv: bool | None = None
-    pending: list = []  # refills awaiting their consumer's class
+    pending: list = []  # refills/points awaiting their consumer's class
     for i, seg in enumerate(program.segments):
-        if seg.kind == "refill":
+        if seg.kind in ("refill", "point"):
             pending.append(i)
             continue
         conv = seg.kind in _CONVERGENT_KINDS
@@ -204,6 +204,12 @@ def _build(expr, shape3, was_2d, dtype, backend, plan, max_chunks,
            specialize, trace):
     program = lower(expr)
     n, h, w = shape3
+    if (dtype.kind != "f"
+            and any(s.kind == "gdt" for s in program.segments)):
+        raise TypeError(
+            f"gdt requires a float dtype (the distance plane is a float "
+            f"lattice), got {dtype}"
+        )
     if plan is not None:
         # validate an explicit plan against the bound shape regardless
         # of backend — a mismatched schedule is a caller bug even when

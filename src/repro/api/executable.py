@@ -106,6 +106,10 @@ def _seg_need_fill(seg) -> str:
         return seg.param("fill")
     if seg.kind == "qdt":
         return "hi"  # the QDT iterates erosion
+    if seg.kind in ("gdt", "point"):
+        # gdt stages its own planes from −inf-marked operands; point
+        # outputs are re-masked by a refill before any kernel consumer
+        return "lo"
     return _NEED_FILL[seg.param("op")]
 
 
@@ -210,17 +214,20 @@ class Executable:
     @property
     def refillable(self) -> bool:
         """True when this program can run as a continuous-batching slot
-        session: a single convergence-driven segment (reconstruct/QDT)
-        under one pallas plan, compiled for a 3-D batch.  Fixed-length
-        chains gain nothing from refill (no stragglers to wait behind),
-        and multi-segment/specialized programs re-band between plans,
-        which has no per-slot resumable state."""
+        session: a single convergence-driven segment (reconstruct/QDT/
+        gdt) under one pallas plan, compiled for a 3-D batch.
+        Fixed-length chains gain nothing from refill (no stragglers to
+        wait behind), multi-segment/specialized programs re-band
+        between plans, which has no per-slot resumable state, and the
+        raster gdt schedule sweeps whole images (no per-slot activity
+        grid to park and resume)."""
         prog = self.program
         return (self.plan is not None
                 and self.seg_plans is None
                 and not self.was_2d
                 and len(prog.segments) == 1
-                and prog.segments[0].kind in ("reconstruct", "qdt"))
+                and prog.segments[0].kind in ("reconstruct", "qdt", "gdt")
+                and self.plan.schedule == "wavefront")
 
     def slot_session(self, n_chunks: int) -> SlotSession:
         """Build (or fetch) the :class:`SlotSession` entry points for
@@ -246,8 +253,10 @@ class Executable:
         if n_chunks < 1:
             raise ValueError("n_chunks must be >= 1")
         from repro.kernels.common import qdt_acc_dtype
-        from repro.kernels.ops import (_crop3, _scheduled_qdt,
-                                       _scheduled_reconstruct)
+        from repro.kernels.gdt_chain import D_IDENT, I_IDENT, S_IDENT
+        from repro.kernels.ops import (_crop3, _scheduled_gdt,
+                                       _scheduled_qdt,
+                                       _scheduled_reconstruct, gdt_stage)
 
         prog = self.program
         seg = prog.segments[0]
@@ -316,6 +325,49 @@ class Executable:
 
             def chunks_of(state):
                 return state[3]
+
+        elif seg.kind == "gdt":
+            budget = self._budget_rec(plan)
+            i_slot, s_slot = seg.srcs
+            lamb, nu = seg.param("lamb"), seg.param("nu")
+
+            def ident_plane(v):
+                return jnp.full((n * hp, wp), jnp.asarray(v, self.dtype),
+                                self.dtype)
+
+            def init():
+                # parked slots hold the kernel's halo identities: +inf
+                # distance, zero image, −1 seed marker (clamped region)
+                return (ident_plane(D_IDENT), ident_plane(I_IDENT),
+                        ident_plane(S_IDENT), *sched0())
+
+            def admit(state, slot, image, seeds):
+                d, ip, sp, *sched = state
+                img_t = jnp.pad(
+                    image, ((0, hp - h), (0, wp - w)),
+                    constant_values=_fill_value(fills[i_slot], image.dtype))
+                sd_t = jnp.pad(
+                    seeds, ((0, hp - h), (0, wp - w)),
+                    constant_values=_fill_value(fills[s_slot], seeds.dtype))
+                d0, i_t, s_t = gdt_stage(img_t, sd_t, nu)
+                at = (slot * hp, 0)
+                d = jax.lax.dynamic_update_slice(d, d0, at)
+                ip = jax.lax.dynamic_update_slice(ip, i_t, at)
+                sp = jax.lax.dynamic_update_slice(sp, s_t, at)
+                return (d, ip, sp, *arm(tuple(sched), slot))
+
+            def round_(state):
+                d, ip, sp, *sched = state
+                d, finished, sched = _scheduled_gdt(
+                    d, ip, sp, plan, lamb, n_chunks,
+                    resume=tuple(sched), budget=budget)
+                return (d, ip, sp, *sched), finished, sched[2]
+
+            def extract(state):
+                return crops({seg.dsts[0]: state[0]})
+
+            def chunks_of(state):
+                return state[4]
 
         else:  # qdt
             budget = self._budget_qdt(plan)
@@ -504,6 +556,21 @@ class Executable:
             elif seg.kind == "qdt":
                 d, r = OPS.qdt_raw(vals[seg.srcs[0]])
                 vals[seg.dsts[0]], vals[seg.dsts[1]] = d, r
+            elif seg.kind == "gdt":
+                from repro.kernels.ops import gdt_fixpoint_xla
+
+                # Jacobi advances every shortest path by ≥1 edge per
+                # iteration; H·W bounds any simple path's length.
+                vals[seg.dsts[0]] = gdt_fixpoint_xla(
+                    vals[seg.srcs[0]], vals[seg.srcs[1]],
+                    seg.param("lamb"), seg.param("nu"),
+                    self.height * self.width + 2,
+                )
+            elif seg.kind == "point":
+                env = {f"__p{j}": vals[s]
+                       for j, s in enumerate(seg.srcs)}
+                vals[seg.dsts[0]] = eval_pointwise(
+                    seg.param("expr"), env, {}, {})
             else:  # pragma: no cover
                 raise AssertionError(seg.kind)
         return tuple(vals[s] for s in self.program.run_outputs)
@@ -595,7 +662,9 @@ class Executable:
 
     def _pallas_seg(self, seg, vals, plan, conv: list | None = None,
                     util: list | None = None):
-        from repro.kernels.ops import _scheduled_qdt, _scheduled_reconstruct
+        from repro.kernels.ops import (_raster_gdt, _scheduled_gdt,
+                                       _scheduled_qdt,
+                                       _scheduled_reconstruct, gdt_stage)
 
         if seg.kind == "refill":
             x2 = vals[seg.srcs[0]]
@@ -633,6 +702,31 @@ class Executable:
             if util is not None:
                 util.append((jnp.sum(state[1]),
                              jnp.max(state[1]) * jnp.int32(plan.n_images)))
+        elif seg.kind == "gdt":
+            d0, ip, sp = gdt_stage(vals[seg.srcs[0]], vals[seg.srcs[1]],
+                                   seg.param("nu"))
+            budget = self._budget_rec(plan)
+            if plan.schedule == "raster":
+                d, rounds, img_conv = _raster_gdt(
+                    d0, ip, sp, plan, seg.param("lamb"), budget)
+                if util is not None:
+                    # the sweeps run every image every round — full
+                    # occupancy by construction, no parked-slot slack
+                    swept = rounds * jnp.int32(plan.n_images)
+                    util.append((swept, swept))
+            else:
+                d, img_conv, state = _scheduled_gdt(
+                    d0, ip, sp, plan, seg.param("lamb"), budget)
+                if util is not None:
+                    util.append((jnp.sum(state[1]),
+                                 jnp.max(state[1])
+                                 * jnp.int32(plan.n_images)))
+            vals[seg.dsts[0]] = d
+            if conv is not None:
+                conv.append(img_conv)
+        elif seg.kind == "point":
+            env = {f"__p{j}": vals[s] for j, s in enumerate(seg.srcs)}
+            vals[seg.dsts[0]] = eval_pointwise(seg.param("expr"), env, {}, {})
         else:  # pragma: no cover
             raise AssertionError(seg.kind)
 

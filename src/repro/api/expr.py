@@ -30,10 +30,10 @@ from __future__ import annotations
 import dataclasses
 
 #: Node kinds executed inside the padded kernel program.
-KERNEL_KINDS = ("erode", "dilate", "geodesic", "reconstruct", "qdt")
+KERNEL_KINDS = ("erode", "dilate", "geodesic", "reconstruct", "qdt", "gdt")
 
 #: Pointwise / per-image nodes, evaluated unpadded (prepare or finalize).
-POINTWISE_KINDS = ("input", "sat_sub", "sat_add", "sub", "hfill_marker",
+POINTWISE_KINDS = ("input", "sat_sub", "sat_add", "sub", "ge", "hfill_marker",
                    "raobj_marker", "qdt_regularize", "pick")
 
 #: Outputs per node kind (1 unless listed).
@@ -195,6 +195,24 @@ class E:
             return Pipe((lambda v: E.qdt(v),))
         return Expr("qdt", (x,))
 
+    @staticmethod
+    def gdt(image: Expr, seeds: Expr, lamb=1.0, nu=1e6) -> Expr:
+        """Generalised geodesic distance transform (FastGeodis-style).
+
+        The fixpoint of the grey-weighted relaxation over the 8-connected
+        neighbourhood with additive DTOCS cost ``w(p, q) = 1 +
+        lamb·|I(p) − I(q)|``, initialised from soft seeds ``S ∈ [0, 1]``
+        as ``D₀ = nu·(1 − S)``.  ``lamb = 0`` degrades to the Chebyshev
+        distance to the seed set; ``nu`` bounds the unseeded plateau.
+        Float dtypes only (the distance plane is a float lattice).
+        """
+        if lamb < 0:
+            raise ValueError(f"lamb must be >= 0, got {lamb}")
+        if nu <= 0:
+            raise ValueError(f"nu must be > 0, got {nu}")
+        return Expr("gdt", (image, seeds),
+                    _params(lamb=float(lamb), nu=float(nu)))
+
     # -- pointwise nodes ---------------------------------------------------
 
     @staticmethod
@@ -210,6 +228,11 @@ class E:
     def sub(a: Expr, b: Expr) -> Expr:
         """a - b (plain dtype arithmetic, e.g. DOME's residual)."""
         return Expr("sub", (a, b))
+
+    @staticmethod
+    def ge(x: Expr, t) -> Expr:
+        """(x >= t) as 0/1 in x's dtype (thresholding / mask derivation)."""
+        return Expr("ge", (x,), _params(t=float(t)))
 
     @staticmethod
     def hfill_marker(x: Expr) -> Expr:
@@ -228,11 +251,18 @@ class E:
 
     @staticmethod
     def pick(x: Expr, i: int) -> Expr:
-        """Select output ``i`` of a multi-output node (the QDT planes)."""
+        """Select output ``i`` of a multi-output node (the QDT planes).
+
+        Normalizing: picking the only output of a single-output node is
+        the node itself, so ``pick(pick(qdt(f), 0), 0)`` collapses and
+        every consumer sees one canonical graph.
+        """
         if not 0 <= i < x.n_outputs:
             raise ValueError(
                 f"pick({i}) out of range for {x.kind} ({x.n_outputs} outputs)"
             )
+        if x.n_outputs == 1:
+            return x
         return Expr("pick", (x,), _params(i=int(i)))
 
 

@@ -40,14 +40,24 @@ _IDENT = {"erode": "hi", "dilate": "lo"}
 
 #: Same-shaped operand planes each segment kind keeps resident in VMEM
 #: (drives the shared ChainPlan's ``n_images_resident``).
-_RESIDENT = {"chain": 1, "geodesic": 2, "reconstruct": 2, "qdt": 3}
+_RESIDENT = {"chain": 1, "geodesic": 2, "reconstruct": 2, "qdt": 3,
+             "gdt": 3, "point": 1}
+
+#: Pointwise kinds a ``point`` run segment may contain: strictly
+#: elementwise maps, safe to evaluate on padded slots (the pad region
+#: comes out dirty and the dst's ``None`` pad state forces a refill
+#: before any kernel consumer).  Per-image reductions
+#: (``hfill_marker``/``raobj_marker``) and crop-contract nodes
+#: (``qdt_regularize``) stay un-lowerable between kernels.
+_POINT_KINDS = ("sat_sub", "sat_add", "sub", "ge")
 
 
 @dataclasses.dataclass(frozen=True)
 class RunSeg:
     """One run-phase segment: reads ``srcs`` slots, writes ``dsts``."""
 
-    kind: str       # "chain" | "geodesic" | "reconstruct" | "qdt" | "refill"
+    kind: str       # "chain" | "geodesic" | "reconstruct" | "qdt" | "gdt"
+                    # | "point" | "refill"
     srcs: tuple
     dsts: tuple
     params: tuple   # sorted (name, value) pairs
@@ -61,6 +71,8 @@ class RunSeg:
             return f"{p['op'][:2]}{p['n']}"
         if self.kind == "refill":
             return f"rf:{p['fill']}"
+        if self.kind == "point":
+            return "pt"
         tag = ":".join(str(v) for _, v in self.params)
         return f"{self.kind[:3]}{':' + tag if tag else ''}"
 
@@ -90,7 +102,11 @@ class Program:
 
     @property
     def kernel_segments(self) -> tuple:
-        return tuple(s for s in self.segments if s.kind != "refill")
+        """True padded-kernel segments: refills are plumbing and
+        ``point`` segments are exact on the real region by construction
+        (strictly elementwise), so neither counts against pad safety."""
+        return tuple(s for s in self.segments
+                     if s.kind not in ("refill", "point"))
 
     @property
     def pad_safe(self) -> bool:
@@ -102,7 +118,8 @@ class Program:
 
     @property
     def convergent(self) -> bool:
-        return any(s.kind in ("reconstruct", "qdt") for s in self.segments)
+        return any(s.kind in ("reconstruct", "qdt", "gdt")
+                   for s in self.segments)
 
     @property
     def n_resident(self) -> int:
@@ -190,6 +207,7 @@ class _Lowerer:
         self.input_slots: list[int] = []
         self.pre_slot: dict[Expr, int] = {}
         self.kernel_slots: dict[Expr, tuple] = {}
+        self.point_slots: dict[Expr, int] = {}
         self.pad_state: dict[int, str | None] = {}
         self.refilled: dict[tuple, int] = {}
         self.next_slot = 0
@@ -215,8 +233,12 @@ class _Lowerer:
                 self.prepare.append(node)
                 self.fills.append(fill)
                 self.input_slots.append(slot)
-        else:
+        elif node.kind in KERNEL_KINDS:
             slot = self._kernel(node)[0]
+        elif node.kind == "pick" and node.args[0].kind in KERNEL_KINDS:
+            slot = self._kernel(node.args[0])[node.param("i")]
+        else:
+            slot = self._point(node)
         if self.pad_state[slot] == fill:
             return slot
         refill = self.refilled.get((slot, fill))
@@ -258,11 +280,63 @@ class _Lowerer:
             d_slot, r_slot = self._alloc(None), self._alloc(None)
             seg = RunSeg("qdt", (src,), (d_slot, r_slot), ())
             slots = (d_slot, r_slot)
+        elif kind == "gdt":
+            # Both operands pad with the float lattice bottom (−inf):
+            # the driver's ``gdt_stage`` reads it back as the pad marker
+            # and derives the sanitized resident planes from it.
+            isrc = self._operand(node.args[0], "lo")
+            ssrc = self._operand(node.args[1], "lo")
+            dst = self._alloc(None)
+            seg = RunSeg("gdt", (isrc, ssrc), (dst,), node.params)
+            slots = (dst,)
         else:  # pragma: no cover - Expr.__post_init__ guards kinds
             raise LoweringError(f"unhandled kernel kind {kind!r}")
         self.segments.append(seg)
         self.kernel_slots[node] = slots
         return slots
+
+    def _point(self, node: Expr) -> int:
+        """Lower a strictly-pointwise expression over kernel outputs as
+        one ``point`` run segment (memoized).
+
+        The segment's single param is a *relative* expression whose
+        leaves ``__p0 … __pn`` bind to ``srcs`` in order; the executable
+        evaluates it elementwise on the padded slots.  The dst's pad
+        region is dirty (``None`` state), so the ordinary refill
+        machinery masks it before any kernel consumer reads it.
+        """
+        slot = self.point_slots.get(node)
+        if slot is not None:
+            return slot
+        srcs: list[int] = []
+
+        def rel(n: Expr) -> Expr:
+            if n.kind in KERNEL_KINDS:
+                src = self._kernel(n)[0]
+            elif n.kind == "pick" and n.args[0].kind in KERNEL_KINDS:
+                src = self._kernel(n.args[0])[n.param("i")]
+            elif _is_pre(n):
+                src = self._operand(n, "lo")
+            else:
+                if n.kind not in _POINT_KINDS:
+                    raise LoweringError(
+                        f"{n.kind} depends on a kernel output but is not "
+                        "an elementwise map — it cannot run between "
+                        "kernels (compute it as a separate compiled "
+                        "expression)"
+                    )
+                return Expr(n.kind, tuple(rel(a) for a in n.args), n.params)
+            if src not in srcs:
+                srcs.append(src)
+            return E.input(f"__p{srcs.index(src)}")
+
+        expr = rel(node)
+        dst = self._alloc(None)
+        self.segments.append(
+            RunSeg("point", tuple(srcs), (dst,), (("expr", expr),))
+        )
+        self.point_slots[node] = dst
+        return dst
 
     def _collect_outputs(self, node: Expr, needed: list, seen: set):
         """Kernel outputs the finalize evaluation of ``node`` reads."""
@@ -304,10 +378,30 @@ class _Lowerer:
         )
 
     def _check_no_kernel_under_pointwise_operand(self, root: Expr):
-        """Kernel operands must be prepare-side or kernel outputs; a
-        pointwise node *between* two kernels has nowhere to run without
-        leaving the padded program."""
+        """Kernel operands must resolve to run slots: prepare values,
+        (possibly picked) kernel outputs, or strictly-elementwise maps
+        of those (lowered as ``point`` segments).  A *non*-elementwise
+        pointwise node between kernels — a per-image reduction or a
+        crop-contract node like ``qdt_regularize`` — has nowhere to run
+        without leaving the padded program, so it raises here, before
+        any slot is allocated."""
         seen = set()
+
+        def check_point(n):
+            # mirrors _point's recursion, validating without allocating
+            if (n.kind in KERNEL_KINDS or _is_pre(n)
+                    or (n.kind == "pick"
+                        and n.args[0].kind in KERNEL_KINDS)):
+                return
+            if n.kind not in _POINT_KINDS:
+                raise LoweringError(
+                    f"{n.kind} depends on a kernel output but is not an "
+                    "elementwise map — such pointwise stages between "
+                    "kernels are not lowerable (compute it as a "
+                    "separate compiled expression)"
+                )
+            for a in n.args:
+                check_point(a)
 
         def walk(node):
             if node in seen:
@@ -315,20 +409,7 @@ class _Lowerer:
             seen.add(node)
             if node.kind in KERNEL_KINDS:
                 for a in node.args:
-                    if not _is_pre(a) and a.kind not in KERNEL_KINDS:
-                        if not (a.kind == "pick"
-                                and a.args[0].kind in KERNEL_KINDS):
-                            raise LoweringError(
-                                f"{node.kind} consumes {a.kind}, which "
-                                "depends on a kernel output — pointwise "
-                                "stages between kernels are not "
-                                "lowerable (compute it as a separate "
-                                "compiled expression)"
-                            )
-                        raise LoweringError(
-                            f"{node.kind} cannot consume a picked "
-                            "multi-output plane inside one program"
-                        )
+                    check_point(a)
             for a in node.args:
                 walk(a)
 
@@ -375,6 +456,8 @@ def eval_pointwise(node: Expr, inputs: dict, kernel_vals: dict, memo: dict):
             val = OPS.sat_add(args[0], node.param("h"))
         elif kind == "sub":
             val = args[0] - args[1]
+        elif kind == "ge":
+            val = (args[0] >= node.param("t")).astype(args[0].dtype)
         elif kind == "hfill_marker":
             val = OPS.hfill_marker(args[0])
         elif kind == "raobj_marker":

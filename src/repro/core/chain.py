@@ -69,6 +69,13 @@ CONVERGENT_TARGET_BANDS = 16
 #: images coarsen their tiles instead of growing the activity grid).
 CONVERGENT_TARGET_TILES = 16
 
+#: Scheduling policies for convergence-driven chains.  ``wavefront`` is
+#: the active-tile requeue scheduler (Teodoro-style propagation — pays
+#: only for tiles the wavefront touches); ``raster`` sweeps the whole
+#: image with directional forward/backward passes (FastGeodis-style —
+#: wins when the wavefront is dense and activity tracking is overhead).
+SCHEDULES = ("wavefront", "raster")
+
 
 @dataclasses.dataclass(frozen=True)
 class ChainPlan:
@@ -89,6 +96,7 @@ class ChainPlan:
     requeue_halo: int = 1        # tiles re-activated around a changed tile
     compact_threshold: float = 0.0   # active fraction below which to compact
     tile_w: int = 0      # column-tile width; 0 = full-width row bands
+    schedule: str = "wavefront"  # "wavefront" (requeue) | "raster" (sweeps)
 
     def __post_init__(self):
         # The one place the band/fuse/tile contract is validated (the
@@ -124,6 +132,10 @@ class ChainPlan:
                     f"width_pad={self.width_pad} must be a multiple of "
                     f"tile_w={self.tile_w}"
                 )
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"schedule={self.schedule!r} must be one of {SCHEDULES}"
+            )
 
     @property
     def key(self) -> tuple:
@@ -135,7 +147,8 @@ class ChainPlan:
         is the stable serialization-friendly form."""
         return (self.band_h, self.fuse_k, self.width_pad, self.height_pad,
                 self.n_bands, self.n_chunks, self.n_images,
-                self.requeue_halo, self.compact_threshold, self.tile_w)
+                self.requeue_halo, self.compact_threshold, self.tile_w,
+                self.schedule)
 
     @property
     def total_bands(self) -> int:
@@ -184,6 +197,7 @@ def plan_chain(
     requeue_halo: int = 1,
     compact_threshold: float | None = None,
     tile_w: int | None = None,
+    schedule: str = "wavefront",
 ) -> ChainPlan:
     """Choose (TH, K) so the working set fits VMEM.
 
@@ -254,6 +268,7 @@ def plan_chain(
         requeue_halo=requeue_halo,
         compact_threshold=compact_threshold,
         tile_w=tile_w,
+        schedule=schedule,
     )
 
 

@@ -79,6 +79,9 @@ from repro.core.backend import (Backend, canonicalize_backend,
 from repro.core.chain import ChainPlan, plan_chain
 from repro.kernels.common import ident_for, qdt_acc_dtype
 from repro.kernels.erode_chain import chain_step
+from repro.kernels.gdt_chain import (D_IDENT, I_IDENT, S_IDENT,
+                                     gdt_chain_step, gdt_compact_step,
+                                     gdt_tile_step)
 from repro.kernels.geodesic_chain import (geodesic_chain_step,
                                           geodesic_compact_step,
                                           geodesic_tile_step)
@@ -862,6 +865,258 @@ def qdt_planes(
     exe = api.compile(api.E.qdt(api.E.input("f")), f.shape, f.dtype,
                       backend, plan=plan, max_chunks=max_chunks)
     return exe(f)
+
+
+# ---------------------------------------------------------------------------
+# generalised geodesic distance transform (grey-weighted, FastGeodis-style)
+# ---------------------------------------------------------------------------
+
+
+def gdt_stage(ip: jnp.ndarray, sp: jnp.ndarray, nu: float):
+    """Derive the kernel's three resident planes from the *padded*
+    image/seed operands (both arrive with the float lattice bottom,
+    −inf, as their absorbing pad fill).
+
+    Returns ``(d0, i, s)``: the initial distance plane ``d0 = nu·(1−S)``
+    (+inf on pads), the sanitized image (0 on pads, so the weight term
+    never computes ``|−inf − (−inf)| = NaN``) and the seed/pad-marker
+    plane (clipped to [0, 1] in the real region, −1 on pads — the value
+    the kernels re-clamp ``d = +inf`` on after every elementary step).
+    This is the single sanitization point: the kernels and the raster
+    sweeps assume the planes are already in this form.
+    """
+    in_pad = jnp.isneginf(sp)
+    sc = jnp.clip(sp, 0.0, 1.0)  # clip(−inf) → 0.0 without NaN
+    d0 = jnp.where(in_pad, jnp.asarray(D_IDENT, ip.dtype),
+                   (nu * (1.0 - sc)).astype(ip.dtype))
+    i = jnp.where(in_pad, jnp.asarray(I_IDENT, ip.dtype), ip)
+    s = jnp.where(in_pad, jnp.asarray(S_IDENT, ip.dtype), sc)
+    return d0, i, s
+
+
+def _scheduled_gdt(dp, ip, sp, plan: ChainPlan, lamb: float, max_chunks: int,
+                   resume=None, budget: int | None = None):
+    """gdt's step functions for :func:`_drive_scheduler` (the wavefront
+    schedule).
+
+    ``dp``/``ip``/``sp`` are stacked (TOTAL_H, W_pad) planes from
+    :func:`gdt_stage`.  Only the distance plane evolves; the image and
+    seed planes are chunk-invariant, so their compact-workspace patches
+    go through the driver's ``gather_const`` cache as one pytree.
+    Returns (d, img_converged, state) — the same resumable contract as
+    ``_scheduled_qdt``, which is what lets ``Executable.slot_session``
+    refill gdt slots mid-flight.
+    """
+    k = plan.fuse_k
+
+    def full_step(d, active, base):
+        if plan.n_tiles > 1:
+            return gdt_tile_step(
+                d, ip, sp, lamb=lamb, fuse_k=k, band_h=plan.band_h,
+                tile_w=plan.tile_w, interpret=_INTERPRET, active=active,
+                bands_per_image=plan.n_bands,
+            )
+        return gdt_chain_step(
+            d, ip, sp, lamb=lamb, fuse_k=k, band_h=plan.band_h,
+            interpret=_INTERPRET, active=active,
+            bands_per_image=plan.n_bands,
+        )
+
+    def gather_const(idx):
+        return (_gather_patches(ip, idx, plan, I_IDENT),
+                _gather_patches(sp, idx, plan, S_IDENT))
+
+    def compact_step(d, idx, valid, const, base):
+        i_patch, s_patch = const
+        d_patch = _gather_patches(d, idx, plan, D_IDENT)
+        new_mid, ch = gdt_compact_step(
+            d_patch, i_patch, s_patch, valid,
+            lamb=lamb, fuse_k=k, band_h=plan.band_h,
+            tile_w=_cell_tile_w(plan), interpret=_INTERPRET,
+        )
+        d = _scatter_mid(d, idx, new_mid, plan)
+        return d, _scatter_flags(ch, idx, plan)
+
+    d, _, _, _, img_conv, state = _drive_scheduler(
+        plan, dp, full_step=full_step, compact_step=compact_step,
+        gather_const=gather_const, max_chunks=max_chunks,
+        resume=resume, budget=budget,
+    )
+    return d, img_conv, state
+
+
+def _shift_row(x: jnp.ndarray, dx: int, fill):
+    """(N, W) row batch translated along W with ``fill`` at the border."""
+    if dx == 1:
+        return jnp.concatenate(
+            [jnp.full_like(x[:, :1], fill), x[:, :-1]], axis=1)
+    if dx == -1:
+        return jnp.concatenate(
+            [x[:, 1:], jnp.full_like(x[:, :1], fill)], axis=1)
+    return x
+
+
+def _gdt_sweep(d3, i3, s3, lamb: float, reverse: bool):
+    """One directional raster pass: a ``lax.scan`` over rows (axis 1)
+    carrying the *updated* previous row, relaxing each row against its
+    three upper (``reverse=False``) or lower (``reverse=True``)
+    neighbours.  The left/right passes run this on the W↔H transposed
+    planes; across the four directions the candidate sets cover the
+    full 8-neighbourhood, so iterating rounds to a fixpoint lands on
+    the same bits as the wavefront scheduler (see
+    ``repro.gdt.reference``)."""
+    inf = jnp.asarray(D_IDENT, d3.dtype)
+    xs = (jnp.moveaxis(d3, 1, 0), jnp.moveaxis(i3, 1, 0),
+          jnp.moveaxis(s3, 1, 0))
+
+    def step(carry, row):
+        prev_d, prev_i = carry
+        d_row, i_row, s_row = row
+        best = d_row
+        for dx in (-1, 0, 1):
+            dq = _shift_row(prev_d, dx, inf)
+            if lamb == 0.0:
+                cand = dq + 1.0
+            else:
+                iq = _shift_row(prev_i, dx, jnp.asarray(I_IDENT, d3.dtype))
+                # outer abs blocks fmul+fadd→fma contraction (see
+                # kernels.gdt_chain.elementary_gdt)
+                cand = dq + (1.0 + jnp.abs(lamb * jnp.abs(i_row - iq)))
+            best = jnp.minimum(best, cand)
+        new_d = jnp.where(s_row < 0, inf, best)
+        return (new_d, i_row), new_d
+
+    init = (jnp.full_like(d3[:, 0], inf), jnp.zeros_like(d3[:, 0]))
+    _, out = jax.lax.scan(step, init, xs, reverse=reverse)
+    return jnp.moveaxis(out, 0, 1)
+
+
+def _raster_gdt(dp, ip, sp, plan: ChainPlan, lamb: float, max_rounds: int):
+    """The raster-scan schedule: FastGeodis-style down/up/left/right
+    sweeps iterated to fixpoint (``plan.schedule == "raster"``).
+
+    Runs on the *unstacked* (N, H_pad, W_pad) view — the scans walk
+    rows/columns of each image separately, so batched images can never
+    leak into each other (no band-halo pinning needed).  Returns
+    ``(d, rounds, img_converged)`` with ``d`` re-stacked; an image
+    unchanged by the last full round is at its fixpoint (the sweeps are
+    deterministic per image), so the convergence vector is exact even
+    when the round budget truncates the others.
+    """
+    n = plan.n_images
+    d3, i3, s3 = (_unstacked(x, n) for x in (dp, ip, sp))
+    i3t, s3t = i3.swapaxes(1, 2), s3.swapaxes(1, 2)
+
+    def one_round(d3):
+        d3 = _gdt_sweep(d3, i3, s3, lamb, reverse=False)
+        d3 = _gdt_sweep(d3, i3, s3, lamb, reverse=True)
+        d3t = _gdt_sweep(d3.swapaxes(1, 2), i3t, s3t, lamb, reverse=False)
+        d3t = _gdt_sweep(d3t, i3t, s3t, lamb, reverse=True)
+        return d3t.swapaxes(1, 2)
+
+    def cond(state):
+        _, it, changed = state
+        return jnp.logical_and(jnp.any(changed), it < max_rounds)
+
+    def body(state):
+        d, it, _ = state
+        new = one_round(d)
+        changed = jnp.any(new != d, axis=(1, 2))
+        return new, it + 1, changed
+
+    d3, rounds, changed = jax.lax.while_loop(
+        cond, body,
+        (d3, jnp.asarray(0, jnp.int32), jnp.ones((n,), jnp.bool_)),
+    )
+    return _stacked(d3), rounds, jnp.logical_not(changed)
+
+
+def gdt_fixpoint_xla(img3: jnp.ndarray, seeds3: jnp.ndarray, lamb: float,
+                     nu: float, max_iters: int) -> jnp.ndarray:
+    """Pure-jnp Jacobi oracle on unpadded (..., H, W) stacks — the "xla"
+    backend body, bit-exact with ``repro.gdt.reference`` by the shared
+    fold-cost argument.  Axis-polymorphic over leading batch dims (2-D
+    executables keep 2-D arrays end-to-end)."""
+    dtype = img3.dtype
+    inf = jnp.asarray(jnp.inf, dtype)
+    sc = jnp.clip(seeds3.astype(dtype), 0.0, 1.0)
+    d = (nu * (1.0 - sc)).astype(dtype)
+
+    def shift(x, dy, dx, fill):
+        pad = ([(0, 0)] * (x.ndim - 2)
+               + [(max(dy, 0), max(-dy, 0)), (max(dx, 0), max(-dx, 0))])
+        y = jnp.pad(x, pad, constant_values=fill)
+        h, w = x.shape[-2], x.shape[-1]
+        return y[..., max(-dy, 0): max(-dy, 0) + h,
+                 max(-dx, 0): max(-dx, 0) + w]
+
+    offsets = [(dy, dx) for dy in (-1, 0, 1) for dx in (-1, 0, 1)
+               if (dy, dx) != (0, 0)]
+    if lamb == 0.0:
+        weights = [jnp.asarray(1.0, dtype)] * len(offsets)
+    else:
+        # outer abs blocks fmul+fadd→fma contraction (see
+        # kernels.gdt_chain.elementary_gdt)
+        weights = [
+            1.0 + jnp.abs(lamb * jnp.abs(img3 - shift(img3, dy, dx, 0.0)))
+            for dy, dx in offsets
+        ]
+
+    def cond(state):
+        d, prev, it = state
+        return jnp.logical_and(jnp.any(d != prev), it < max_iters)
+
+    def body(state):
+        d, _, it = state
+        cand = d
+        for (dy, dx), w in zip(offsets, weights):
+            cand = jnp.minimum(cand, shift(d, dy, dx, inf) + w)
+        return cand, d, it + 1
+
+    d, _, _ = jax.lax.while_loop(
+        cond, body, (d, jnp.full_like(d, -inf), jnp.asarray(0, jnp.int32)))
+    return d
+
+
+def gdt(
+    image: jnp.ndarray,
+    seeds: jnp.ndarray,
+    lamb: float = 1.0,
+    nu: float = 1e6,
+    backend: Backend | None = None,
+    max_chunks: int | None = None,
+    plan: ChainPlan | None = None,
+) -> jnp.ndarray:
+    """Generalised geodesic distance transform (see ``E.gdt``).
+
+    Accepts (H, W) or (N, H, W) image/seed stacks; float dtypes only.
+    Routes through ``repro.api.compile``; pass a ``plan`` with
+    ``schedule="raster"`` to select the sweep schedule.
+    ``backend=``/``max_chunks=`` are deprecated here (bind them at
+    compile time instead).
+    """
+    legacy = [n for n, v in (("backend", backend),
+                             ("max_chunks", max_chunks)) if v is not None]
+    if legacy:
+        warn_legacy_kwargs("kernels.ops.gdt", *legacy)
+    # resolve dtypes the way execution will: without x64, jnp downcasts
+    # a NumPy float64 to float32 — compile at the post-cast dtype
+    image = jnp.asarray(image)
+    seeds = jnp.asarray(seeds)
+    if jnp.dtype(image.dtype).kind != "f":
+        raise TypeError(
+            f"gdt: image must be a float dtype, got {image.dtype} (the "
+            "distance plane is a float lattice)"
+        )
+    if image.shape != seeds.shape:
+        raise ValueError(
+            f"image shape {image.shape} != seeds shape {seeds.shape}")
+    api = _api()
+    expr = api.E.gdt(api.E.input("image"), api.E.input("seeds"),
+                     lamb=lamb, nu=nu)
+    exe = api.compile(expr, image.shape, image.dtype, backend, plan=plan,
+                      max_chunks=max_chunks)
+    return exe(image, seeds)
 
 
 # ---------------------------------------------------------------------------

@@ -108,6 +108,7 @@ class OpSpec:
     arity: int = 1           # image inputs per request (user-facing)
     n_inputs: int | None = None  # canonical inputs after prepare (None=arity)
     n_outputs: int = 1
+    dtypes: str = "uif"      # supported NumPy dtype kinds
     pad_safe: bool = True
     pad_fills: Callable | None = None      # params dict -> ("hi"|"lo", ...)
     prepare: Callable | None = None        # custom per-request stage
@@ -270,18 +271,23 @@ def _from_hook(hook) -> OpSpec:
     params = _specs(hook["name"], hook["params"])
     sample = {name: p.sample() for name, p in params.items()}
     prog = lower(hook["expr"](sample))
+    # gdt iterates a float distance lattice — programs containing it
+    # only compile for float dtypes (see api/compile.py's gate)
+    dtypes = ("f" if any(s.kind == "gdt" for s in prog.segments)
+              else "uif")
     return OpSpec(
         name=hook["name"], params=params, expr_builder=hook["expr"],
         arity=len(prog.input_names), n_inputs=len(prog.run_fills),
-        n_outputs=prog.n_outputs, pad_safe=prog.pad_safe,
+        n_outputs=prog.n_outputs, dtypes=dtypes, pad_safe=prog.pad_safe,
     )
 
 
 def _install_hooks():
+    from repro import gdt as G
     from repro.core import operators as OPS
     from repro.kernels import ops as K
 
-    for hook in (*K.SERVE_OPS, *OPS.SERVE_OPS):
+    for hook in (*K.SERVE_OPS, *OPS.SERVE_OPS, *G.SERVE_OPS):
         register(_from_hook(hook))
 
 

@@ -90,7 +90,8 @@ from repro.serve.bucketer import (BucketKey, BucketQueue, PendingRequest,
 from repro.serve.cache import CacheEntry, CompiledProgramCache
 from repro.serve.continuous import SlotEngine
 from repro.serve.errors import (DeadlineExceededError, InvalidRequestError,
-                                QueueFullError, ServiceClosedError)
+                                QueueFullError, ServiceClosedError,
+                                UnsupportedDtypeError)
 from repro.serve.executor import Executor
 from repro.serve.loop import EventLoop
 from repro.serve.metrics import ServeMetrics
@@ -155,11 +156,34 @@ class Service:
                                  backoff_s=retry_backoff_ms / 1e3,
                                  sleep=sleep)
         self._queue = BucketQueue(max_batch, max_delay_ms / 1e3)
+        self._assets: dict[str, np.ndarray] = {}
         self._flush_timers: dict[BucketKey, object] = {}
         self._engines: dict[BucketKey, SlotEngine] = {}
         self._quantum: dict[str, int] = {}  # adaptive per-sig overrides
         self._closed = False
         self._next_id = 0
+
+    # -- pinned assets -----------------------------------------------------
+
+    def pin(self, name: str, image) -> None:
+        """Pin a host image under ``name`` so later ``submit`` calls can
+        pass the name in place of the array — the incremental-update
+        pattern: pin the (large, unchanging) image once, then stream
+        cheap marker/seed updates against it, e.g.
+        ``service.pin("slice", ct); service.submit("gdt", "slice",
+        scribbles)``.  Requests resolving a pinned asset count into the
+        ``asset_hits`` metric.  Re-pinning a name replaces it (later
+        submits see the new array; staged requests keep the old one)."""
+        arr = np.asarray(image)
+        if arr.ndim != 2:
+            raise InvalidRequestError(
+                f"pin({name!r}): expected a 2-D image, got shape "
+                f"{arr.shape}")
+        self._assets[str(name)] = arr
+
+    def unpin(self, name: str) -> None:
+        """Drop a pinned asset (KeyError when absent)."""
+        del self._assets[name]
 
     # -- request intake ----------------------------------------------------
 
@@ -247,7 +271,18 @@ class Service:
             raise InvalidRequestError(
                 f"op {op!r} takes {spec.arity} image(s), got {len(images)}"
             )
-        imgs = tuple(np.asarray(im) for im in images)
+        resolved = []
+        for im in images:
+            if isinstance(im, str):
+                try:
+                    im = self._assets[im]
+                except KeyError:
+                    raise InvalidRequestError(
+                        f"op {op!r}: unknown pinned asset {im!r} "
+                        f"(pinned: {sorted(self._assets)})") from None
+                self.metrics.count("asset_hits")
+            resolved.append(im)
+        imgs = tuple(np.asarray(im) for im in resolved)
         for im in imgs:
             if im.ndim != 2:
                 raise InvalidRequestError(
@@ -259,6 +294,12 @@ class Service:
                     f"{[(i.shape, str(i.dtype)) for i in imgs]}"
                 )
         check_payload(op, imgs)  # lattice dtype + non-finite rejection
+        if np.dtype(imgs[0].dtype).kind not in spec.dtypes:
+            raise UnsupportedDtypeError(
+                f"op {op!r} supports dtype kinds {spec.dtypes!r}, got "
+                f"{imgs[0].dtype} (gdt-backed ops iterate a float "
+                "distance lattice)"
+            )
         return spec, imgs, spec.canonical_params(params)
 
     # -- engine pumping ----------------------------------------------------

@@ -372,9 +372,50 @@ def test_compile_validation(rng):
     with pytest.raises(ValueError, match="smaller than"):
         api.compile(E.erode(2, f), (200, 200), np.uint8, "pallas",
                     plan=bad_plan)
-    # pointwise stages between kernels are not lowerable
+    # per-image reductions between kernels are not lowerable (elementwise
+    # maps now bridge as "point" segments — see test_point_segment_bridge)
     with pytest.raises(LoweringError, match="pointwise"):
-        lower(E.erode(2, E.sub(f, E.erode(1, f))))
+        lower(E.erode(2, E.hfill_marker(E.erode(1, f))))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_point_segment_bridge(rng, backend):
+    """Elementwise exprs between kernels lower as a ``point`` segment
+    (top-hat fed back into an erosion) and stay bit-exact."""
+    f = E.input("f")
+    expr = E.erode(2, E.sub(f, E.erode(1, f)))
+    prog = lower(expr)
+    assert [s.kind for s in prog.segments] == [
+        "refill", "chain", "point", "refill", "chain"]
+    img = jnp.asarray(rng.integers(0, 255, (24, 30)).astype(np.uint8))
+    out = api.compile(expr, img.shape, img.dtype, backend)(img)
+    tophat = np.asarray(img) - np.asarray(M.erode(img, 1))
+    ref = np.asarray(M.erode(jnp.asarray(tophat), 2))
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_pick_fanout_edges(rng, backend):
+    """E.pick edge cases: out-of-range index, pick-of-pick collapse,
+    and one pick feeding two consumers."""
+    f = E.input("f")
+    q = E.qdt(f)
+    with pytest.raises(ValueError, match="out of range"):
+        E.pick(q, q.n_outputs)
+    with pytest.raises(ValueError, match="out of range"):
+        E.pick(q, -1)
+    # pick of a single-output node is the node itself, so pick-of-pick
+    # collapses to one pick
+    d = E.pick(q, 0)
+    assert E.pick(d, 0) is d
+    # one pick fanning out into two consumers of the same kernel output
+    expr = E.sub(E.sat_add(d, 1), d)
+    img = jnp.asarray((rng.integers(0, 2, (24, 30)) * 255).astype(np.uint8))
+    out = api.compile(expr, img.shape, img.dtype, backend)(img)
+    d_ref = np.asarray(
+        api.compile(d, img.shape, img.dtype, "xla")(img))
+    ref = np.minimum(d_ref.astype(np.int64) + 1, 255).astype(np.uint8) - d_ref
+    np.testing.assert_array_equal(np.asarray(out), ref)
 
 
 def test_operator_sugar_accepts_nd_batches(rng):

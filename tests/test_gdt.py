@@ -1,0 +1,329 @@
+"""The generalised geodesic distance subsystem (``repro.gdt``).
+
+The fixpoint is a min over paths of left-folded float sums, so it is
+schedule-independent: every engine — the wavefront chunk scheduler,
+the raster sweeps, the XLA Jacobi oracle — must reproduce the
+pure-NumPy reference **bit-for-bit** (``np.array_equal``, never
+tolerances), 2-D and batched, plus the λ=0 bridge to the binary QDT,
+the segmentation composites, the serve pin/incremental-update path and
+the static-verifier findings the subsystem added.
+"""
+import types
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import analysis as A
+from repro import api
+from repro.analysis.dtypes import check_executable_dtypes
+from repro.analysis.findings import ERROR
+from repro.analysis.halo import segment_reach
+from repro.api import E
+from repro.api.lower import RunSeg, lower
+from repro.core import morphology as M
+from repro.core import operators as OPS
+from repro.core.chain import ChainPlan, plan_chain
+from repro.gdt import gdt, gdt_reference, seg_hmin_expr, seg_scribble_expr
+from repro.kernels import ops as K
+from repro.serve import (InvalidRequestError, Service,
+                         UnsupportedDtypeError)
+
+pytestmark = pytest.mark.pipeline
+
+DTYPES = [np.float32, np.float64]
+LAMB, NU = 0.7, 50.0
+
+
+def _case(rng, shape, dtype, density=0.05):
+    """A smooth-ish float image in [0, 3] and a sparse soft seed plane
+    (one guaranteed hard seed so the plateau is reachable)."""
+    img = (rng.random(shape) * 3.0).astype(dtype)
+    seeds = (rng.random(shape) < density).astype(dtype)
+    seeds[tuple(d // 2 for d in shape)] = 1.0
+    return img, seeds
+
+
+def _expr():
+    return E.gdt(E.input("image"), E.input("seeds"), lamb=LAMB, nu=NU)
+
+
+def _ref(img, seeds):
+    return gdt_reference(np.asarray(img), np.asarray(seeds),
+                         lamb=LAMB, nu=NU)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness against the NumPy oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gdt_bitexact_vs_reference(rng, backend, dtype):
+    img, seeds = _case(rng, (29, 23), dtype)
+    x, s = jnp.asarray(img), jnp.asarray(seeds)  # f64 downcasts (no x64)
+    exe = api.compile(_expr(), x.shape, x.dtype, backend)
+    out = exe(x, s)
+    assert out.dtype == x.dtype and out.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(out), _ref(x, s))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_gdt_batched_stacks(rng, backend):
+    img = np.stack([_case(rng, (24, 20), np.float32)[0] for _ in range(3)])
+    seeds = np.stack([_case(rng, (24, 20), np.float32)[1]
+                      for _ in range(3)])
+    out = np.asarray(api.compile(_expr(), img.shape, img.dtype,
+                                 backend)(jnp.asarray(img),
+                                          jnp.asarray(seeds)))
+    for i in range(3):
+        np.testing.assert_array_equal(out[i], _ref(img[i], seeds[i]))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gdt_raster_schedule_matches_wavefront(rng, dtype):
+    """schedule="raster" (directional sweeps) and schedule="wavefront"
+    (the chunk scheduler) land on the same bits."""
+    img, seeds = _case(rng, (33, 27), dtype)
+    x, s = jnp.asarray(img), jnp.asarray(seeds)
+    wave = api.compile(_expr(), x.shape, x.dtype, "pallas")(x, s)
+    plan = plan_chain(*x.shape, x.dtype, None, n_images_resident=3,
+                      n_images=1, convergent=True, schedule="raster")
+    raster = api.compile(_expr(), x.shape, x.dtype, "pallas",
+                         plan=plan)(x, s)
+    ref = _ref(x, s)
+    np.testing.assert_array_equal(np.asarray(wave), ref)
+    np.testing.assert_array_equal(np.asarray(raster), ref)
+
+
+def test_gdt_lambda_zero_is_the_binary_qdt_bridge(rng):
+    """λ=0 collapses the weight to exactly 1, so gdt from the
+    background of a binary image is the Chebyshev distance — the same
+    erosion counts the binary L1 QDT d-plane records."""
+    binary = (rng.random((18, 14)) < 0.6).astype(np.uint8) * 255
+    f = binary.astype(np.float32)
+    seeds = (binary == 0).astype(np.float32)
+    assert seeds.any() and (binary > 0).any()
+    nu = float(sum(binary.shape))
+    out = np.asarray(gdt(jnp.asarray(f), jnp.asarray(seeds),
+                         lamb=0.0, nu=nu))
+    # brute-force Chebyshev distance to the seed set
+    ys, xs = np.nonzero(seeds)
+    ii, jj = np.mgrid[:binary.shape[0], :binary.shape[1]]
+    cheb = np.min(np.maximum(np.abs(ii[..., None] - ys),
+                             np.abs(jj[..., None] - xs)), axis=-1)
+    np.testing.assert_array_equal(out, cheb.astype(np.float32))
+    # and the binary QDT's erosion-count plane agrees on the objects
+    d = np.asarray(K.qdt_planes(jnp.asarray(binary))[0])
+    np.testing.assert_array_equal(out.astype(np.int64), d.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# guards and plan validation
+# ---------------------------------------------------------------------------
+
+
+def test_gdt_parameter_and_dtype_guards(rng):
+    f, s = E.input("f"), E.input("s")
+    with pytest.raises(ValueError, match="lamb"):
+        E.gdt(f, s, lamb=-1.0)
+    with pytest.raises(ValueError, match="nu"):
+        E.gdt(f, s, nu=0.0)
+    with pytest.raises(TypeError, match="float dtype"):
+        gdt(jnp.zeros((8, 8), jnp.uint8), jnp.zeros((8, 8), jnp.uint8))
+    with pytest.raises(ValueError, match="shape"):
+        gdt(jnp.zeros((8, 8), jnp.float32), jnp.zeros((8, 9), jnp.float32))
+    with pytest.raises(TypeError, match="float dtype"):
+        api.compile(E.gdt(f, s), (16, 16), np.uint8, "pallas")
+
+
+def test_chainplan_schedule_validation():
+    with pytest.raises(ValueError, match="schedule"):
+        plan_chain(32, 32, np.float32, None, schedule="bogus")
+    wave = plan_chain(32, 32, np.float32, None, convergent=True)
+    rast = plan_chain(32, 32, np.float32, None, convergent=True,
+                      schedule="raster")
+    assert wave.key != rast.key  # the schedule is part of the cache key
+
+
+def test_refillable_keys_on_schedule(rng):
+    """Only the wavefront schedule exposes the per-slot activity grid
+    the continuous engine needs; raster sweeps whole images."""
+    wave = api.compile(_expr(), (2, 32, 32), np.float32, "pallas")
+    assert wave.refillable
+    plan = plan_chain(32, 32, np.float32, None, n_images_resident=3,
+                      n_images=2, convergent=True, schedule="raster")
+    rast = api.compile(_expr(), (2, 32, 32), np.float32, "pallas",
+                       plan=plan)
+    assert not rast.refillable
+
+
+# ---------------------------------------------------------------------------
+# segmentation composites
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_seg_scribble_composite(rng, backend):
+    img, _ = _case(rng, (26, 22), np.float32)
+    scrib = np.zeros(img.shape, np.float32)
+    scrib[(rng.random(img.shape) < 0.03)] = 1.0
+    scrib[(rng.random(img.shape) < 0.03) & (scrib == 0)] = 2.0
+    scrib[3, 3], scrib[20, 18] = 1.0, 2.0
+    exe = api.compile(seg_scribble_expr(lamb=LAMB, nu=NU), img.shape,
+                      img.dtype, backend)
+    out = np.asarray(exe(jnp.asarray(img), jnp.asarray(scrib)))
+    d_fg = gdt_reference(img, (scrib == 1.0).astype(np.float32),
+                         lamb=LAMB, nu=NU)
+    d_bg = gdt_reference(img, (scrib == 2.0).astype(np.float32),
+                         lamb=LAMB, nu=NU)
+    np.testing.assert_array_equal(
+        out, (d_bg - d_fg >= 0).astype(np.float32))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_seg_hmin_composite(rng, backend):
+    """h-minima seeding crosses a reconstruction → point bridge → gdt
+    chain inside one program."""
+    h = 0.75
+    img, _ = _case(rng, (24, 20), np.float32)
+    expr = seg_hmin_expr(h, lamb=LAMB, nu=NU)
+    kinds = [s.kind for s in lower(expr).segments]
+    assert "point" in kinds and kinds[-1] == "gdt"
+    out = np.asarray(api.compile(expr, img.shape, img.dtype,
+                                 backend)(jnp.asarray(img)))
+    marker = np.asarray(OPS.sat_add(jnp.asarray(img), h))
+    hmin = np.asarray(M.erode_reconstruct(jnp.asarray(marker),
+                                          jnp.asarray(img)))
+    seeds = (hmin - img >= h).astype(np.float32)
+    np.testing.assert_array_equal(
+        out, gdt_reference(img, seeds, lamb=LAMB, nu=NU))
+
+
+def test_seg_hmin_rejects_nonpositive_h():
+    with pytest.raises(ValueError, match="h="):
+        seg_hmin_expr(0.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: pinned assets + incremental marker updates
+# ---------------------------------------------------------------------------
+
+
+def test_serve_pinned_incremental_updates(rng):
+    """The interactive pattern: pin the image once, stream seed
+    updates against the name — continuous engine, bit-exact, and every
+    resolution counted in ``asset_hits``."""
+    img, _ = _case(rng, (24, 24), np.float32)
+    svc = Service(backend="pallas", max_batch=4, pad_quantum=8,
+                  continuous=True)
+    svc.pin("slice", img)
+    params = {"lamb": LAMB, "nu": NU}
+    tickets, refs = [], []
+    for k in range(3):
+        seeds = np.zeros(img.shape, np.float32)
+        seeds[4 + 6 * k, 5 + 5 * k] = 1.0
+        tickets.append(svc.submit("gdt", "slice", seeds, params=params))
+        refs.append(gdt_reference(img, seeds, lamb=LAMB, nu=NU))
+    svc.flush()
+    for t, ref in zip(tickets, refs):
+        np.testing.assert_array_equal(np.asarray(t.result()), ref)
+    assert svc.stats()["counters"]["asset_hits"] == 3
+
+    with pytest.raises(InvalidRequestError, match="unknown pinned"):
+        svc.submit("gdt", "nosuch", np.zeros(img.shape, np.float32),
+                   params=params)
+    with pytest.raises(InvalidRequestError, match="2-D"):
+        svc.pin("bad", np.zeros((2, 8, 8), np.float32))
+    svc.unpin("slice")
+    with pytest.raises(InvalidRequestError, match="unknown pinned"):
+        svc.submit("gdt", "slice", np.zeros(img.shape, np.float32),
+                   params=params)
+    # gdt-backed ops are float-lattice only: integer payloads get the
+    # typed admission rejection, not a compile error deep in the engine
+    with pytest.raises(UnsupportedDtypeError, match="float"):
+        svc.submit("gdt", np.zeros(img.shape, np.uint8),
+                   np.zeros(img.shape, np.uint8), params=params)
+    svc.close()
+
+
+def test_serve_scribble_segmentation_op(rng):
+    """The registered composite op end-to-end through the service."""
+    img, _ = _case(rng, (20, 20), np.float32)
+    scrib = np.zeros(img.shape, np.float32)
+    scrib[2, 2], scrib[17, 15] = 1.0, 2.0
+    svc = Service(backend="pallas", max_batch=2, pad_quantum=8)
+    svc.pin("slice", img)
+    out = np.asarray(svc.submit(
+        "seg_scribble", "slice", scrib,
+        params={"lamb": LAMB, "nu": NU}).result())
+    d_fg = gdt_reference(img, (scrib == 1.0).astype(np.float32),
+                         lamb=LAMB, nu=NU)
+    d_bg = gdt_reference(img, (scrib == 2.0).astype(np.float32),
+                         lamb=LAMB, nu=NU)
+    np.testing.assert_array_equal(
+        out, (d_bg - d_fg >= 0).astype(np.float32))
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# static verifier findings
+# ---------------------------------------------------------------------------
+
+
+def errors_of(findings):
+    return [f for f in findings if f.severity == ERROR]
+
+
+def test_segment_reach_rejects_unknown_kinds():
+    with pytest.raises(ValueError, match="unknown segment kind"):
+        segment_reach(RunSeg("mystery", (0,), (1,), ()))
+
+
+def test_check_program_flags_unknown_kind_and_op():
+    import dataclasses
+    prog = lower(_expr())
+    live = prog.segments[-1].dsts[0]
+    bogus_kind = dataclasses.replace(
+        prog, segments=prog.segments
+        + (RunSeg("mystery", (live,), (live + 1,), ()),))
+    errs = errors_of(A.check_program(bogus_kind))
+    assert any("unknown segment kind" in f.message for f in errs)
+    bogus_op = dataclasses.replace(
+        prog, segments=prog.segments
+        + (RunSeg("chain", (live,), (live + 1,),
+                  (("n", 1), ("op", "mystery"))),))
+    errs = errors_of(A.check_program(bogus_op))
+    assert any("unknown op" in f.message for f in errs)
+
+
+def test_check_plan_flags_unknown_schedule():
+    import dataclasses
+    plan = plan_chain(32, 32, np.float32, None, convergent=True)
+    mutant = object.__new__(ChainPlan)  # forge past __post_init__
+    for f in dataclasses.fields(ChainPlan):
+        object.__setattr__(mutant, f.name, getattr(plan, f.name))
+    object.__setattr__(mutant, "schedule", "zigzag")
+    errs = errors_of(A.check_plan(mutant))
+    assert any("schedule" in f.message for f in errs)
+
+
+def test_dtype_check_flags_gdt_on_integers():
+    exe = types.SimpleNamespace(
+        dtype=np.dtype(np.uint8), plan=None,
+        program=types.SimpleNamespace(
+            segments=(RunSeg("gdt", (0, 1), (2,),
+                             (("lamb", 1.0), ("nu", 1e6))),)))
+    errs = errors_of(check_executable_dtypes(exe))
+    assert any("gdt" in f.subject for f in errs)
+    clean = api.compile(_expr(), (32, 32), np.float32, "pallas")
+    assert errors_of(check_executable_dtypes(clean)) == []
+
+
+def test_verifier_passes_gdt_programs(rng):
+    """The full fast-level verifier proves every gdt program built in
+    this file (conftest sets REPRO_VERIFY=1, so this is also implicit
+    in every compile above — here we assert the explicit API)."""
+    exe = api.compile(_expr(), (40, 36), np.float32, "pallas")
+    A.verify_executable(exe)  # raises on ERROR findings
